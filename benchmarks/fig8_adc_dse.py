@@ -1,0 +1,43 @@
+"""Fig. 8 + Sec. IV-C: ADC-sharing design-space exploration (BERT).
+
+Paper trends: DenseMap best at low ADC budget (1.6x over Linear at 4/array),
+saturates beyond 8/array, loses to SparseMap at 32; 8b->3b resolution gives
+~2.67x latency/energy.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.cim.dse import (calibrated_config, sweep_adc_resolution,
+                           sweep_adc_sharing)
+from repro.cim.workload import bert_large
+
+
+def run() -> list[tuple[str, float, str]]:
+    cfg = calibrated_config()
+    rows = []
+    t0 = time.perf_counter()
+    pts = sweep_adc_sharing(bert_large(), (1, 4, 8, 16, 32), cfg)
+    by = {(p.adcs_per_array, p.strategy): p for p in pts}
+    for n in (1, 4, 8, 16, 32):
+        l = by[(n, "linear")]
+        s = by[(n, "sparse")]
+        d = by[(n, "dense")]
+        rows.append((
+            f"fig8a/adc{n}", (time.perf_counter() - t0) * 1e6,
+            f"lat_ns L={l.latency_ns:.0f} S={s.latency_ns:.0f} "
+            f"D={d.latency_ns:.0f} L/D={l.latency_ns/d.latency_ns:.2f}",
+        ))
+        rows.append((
+            f"fig8b/adc{n}", (time.perf_counter() - t0) * 1e6,
+            f"energy_nj L={l.energy_nj:.0f} S={s.energy_nj:.0f} "
+            f"D={d.energy_nj:.0f} L/D={l.energy_nj/d.energy_nj:.2f}",
+        ))
+    res = sweep_adc_resolution(bert_large(), cfg)
+    rows.append((
+        "sec4c/adc_resolution", (time.perf_counter() - t0) * 1e6,
+        f"8b->3b latency_scaling={res['latency_scaling']:.2f}x "
+        f"energy_scaling={res['energy_scaling']:.2f}x (paper ~2.67x)",
+    ))
+    return rows

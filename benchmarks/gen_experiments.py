@@ -1,0 +1,58 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline tables from results/."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(variant="paper") -> str:
+    lines = [
+        "| arch | shape | mesh | status | temp GB/dev | args GB/dev | lower s | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(RESULTS.glob(f"*__{variant}.json")):
+        c = json.loads(f.read_text())
+        if c["status"] == "skipped":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | SKIP (sub-quadratic only) | — | — | — | — |")
+            continue
+        m = c.get("memory", {})
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['status']} "
+            f"| {fmt_bytes(m.get('temp_size_in_bytes', 0))} "
+            f"| {fmt_bytes(m.get('argument_size_in_bytes', 0))} "
+            f"| {c.get('time_lower_s', 0):.1f} | {c.get('time_compile_s', 0):.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(variant="paper", mesh="pod16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute ms | t_memory ms | t_coll ms | bottleneck "
+        "| roofline frac | useful FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(RESULTS.glob(f"*__{mesh}__{variant}.json")):
+        c = json.loads(f.read_text())
+        if c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['roofline_fraction']:.4f} | {r['useful_flops_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run (both meshes)\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table())

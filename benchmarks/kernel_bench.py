@@ -1,0 +1,58 @@
+"""Kernel-level benchmark: Monarch vs dense matmul (the Sec. III-B3 fusion).
+
+On this CPU container, wall time of the *einsum paths* demonstrates the
+FLOP-reduction effect end to end (dense vs monarch), and the Pallas kernels
+are timed in interpret mode on small shapes for correctness-parity only —
+their TPU performance is assessed structurally by the roofline (Sec. Perf).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import monarch as mn
+from repro.kernels.monarch import monarch_fused
+from repro.kernels.ref import monarch_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for n, T in ((1024, 512), (4096, 256)):
+        dims = mn.paper_dims(n, n)
+        p = mn.init_monarch(jax.random.PRNGKey(0), dims)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, n))
+        w_dense = jax.random.normal(jax.random.PRNGKey(2), (n, n))
+
+        dense = jax.jit(lambda a, w: a @ w)
+        mon = jax.jit(lambda a, L, R: mn.monarch_multiply(a, L, R))
+        us_dense = _time(dense, x, w_dense)
+        us_mon = _time(mon, x, p["L"], p["R"])
+        rows.append((
+            f"kernel/einsum_n{n}", us_mon,
+            f"dense={us_dense:.0f}us monarch={us_mon:.0f}us "
+            f"speedup={us_dense/us_mon:.2f}x flop_red={dims.compression:.1f}x",
+        ))
+    # interpret-mode parity check (small)
+    dims = mn.MonarchDims(din=256, dout=256, k=16, q=16)
+    p = mn.init_monarch(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 256))
+    t0 = time.perf_counter()
+    y = monarch_fused(x, p["L"], p["R"], interpret=True)
+    us = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(y - monarch_ref(x, p["L"], p["R"]))))
+    rows.append((
+        "kernel/pallas_interpret_n256", us, f"max_err={err:.1e} (oracle parity)",
+    ))
+    return rows

@@ -1,0 +1,64 @@
+"""Aggregate the dry-run matrix (results/dryrun/*.json) into the roofline
+table (EXPERIMENTS.md Sec. Roofline).  Single-pod mesh only, per the spec;
+the multi-pod pass proves the pod axis shards.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16", variant: str = "paper") -> list[dict]:
+    cells = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}__{variant}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def table_rows(cells) -> list[str]:
+    rows = []
+    for c in cells:
+        if c["status"] == "skipped":
+            rows.append(f"{c['arch']:24s} {c['shape']:12s} SKIPPED")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"{c['arch']:24s} {c['shape']:12s} ERROR")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"{c['arch']:24s} {c['shape']:12s} "
+            f"tc={r['t_compute_s']*1e3:9.3f}ms "
+            f"tm={r['t_memory_s']*1e3:9.3f}ms "
+            f"tx={r['t_collective_s']*1e3:9.3f}ms "
+            f"bound={r['bottleneck']:10s} "
+            f"frac={r['roofline_fraction']:.4f} "
+            f"useful={r['useful_flops_ratio']:.3f}"
+        )
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    cells = load_cells()
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    rows = []
+    for c in ok:
+        r = c["roofline"]
+        rows.append((
+            f"roofline/{c['arch']}/{c['shape']}",
+            (time.perf_counter() - t0) * 1e6,
+            f"bound={r['bottleneck']} frac={r['roofline_fraction']:.4f} "
+            f"tc={r['t_compute_s']*1e3:.2f}ms tm={r['t_memory_s']*1e3:.2f}ms "
+            f"tx={r['t_collective_s']*1e3:.2f}ms",
+        ))
+    rows.append((
+        "roofline/summary", (time.perf_counter() - t0) * 1e6,
+        f"cells_ok={len(ok)} skipped={len(skipped)} "
+        f"(40 nominal; skips documented in DESIGN.md Sec. 6)",
+    ))
+    return rows

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+MODULES = [
+    "benchmarks.fig2b_flops_params",
+    "benchmarks.fig6_memory_util",
+    "benchmarks.fig7_latency_energy",
+    "benchmarks.fig8_adc_dse",
+    "benchmarks.d2s_quality",
+    "benchmarks.kernel_bench",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{modname},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""D2S conversion driver (paper Fig. 2a flow): dense checkpoint -> Monarch.
+
+Initializes a dense model, projects every parameterized matmul onto Monarch
+factors (Sec. III-A), reports per-layer error/compression, and compares the
+two models' outputs on the same input.
+
+Run:  PYTHONPATH=src python examples/d2s_convert.py [--arch bert-large-lm]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.d2s import convert_tree
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bert-large-lm")
+    args = ap.parse_args()
+
+    cfg = get_config(f"{args.arch}:dense").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    def select(path, leaf):
+        return any(s in path for s in ("wq", "wk", "wv", "wo", "w1", "w2",
+                                       "wg", "in_proj", "out_proj"))
+
+    sparse, reports = convert_tree(params, select)
+    dense_total = sum(r.dense_params for r in reports)
+    sparse_total = sum(r.sparse_params for r in reports)
+    print(f"converted {len(reports)} parameterized matmuls "
+          f"(Para-Matmul only; embeddings/norms/routers untouched)")
+    print(f"matmul params: {dense_total/1e6:.2f}M -> {sparse_total/1e6:.2f}M "
+          f"({dense_total/max(sparse_total,1):.1f}x)")
+    worst = max(reports, key=lambda r: r.rel_error)
+    print(f"worst per-layer rel error: {worst.rel_error:.3f} ({worst.name})")
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    ld, _ = T.forward(params, {"tokens": tokens}, cfg, train=False)
+    # note: converted tree keeps monarch leaves; forward dispatches on them
+    ls, _ = T.forward(sparse, {"tokens": tokens}, cfg, train=False)
+    pd = jax.nn.softmax(ld, -1)
+    ps = jax.nn.softmax(ls, -1)
+    tv = float(0.5 * jnp.mean(jnp.sum(jnp.abs(pd - ps), axis=-1)))
+    print(f"mean total-variation distance dense vs D2S outputs: {tv:.3f} "
+          "(random init — trained checkpoints approximate much better)")
+    print("d2s_convert OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Sharded checkpointing: atomic save/restore with integrity + resume."""
+
+from repro.checkpoint.store import (  # noqa: F401
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

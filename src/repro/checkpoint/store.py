@@ -1,0 +1,102 @@
+"""Checkpoint store: atomic, integrity-checked, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/manifest.json + <leaf_id>.npy
+* Atomic: written to ``step_<N>.tmp`` then renamed — a crash mid-save never
+  corrupts the latest checkpoint (fault-tolerance requirement).
+* Integrity: per-leaf CRC32 recorded in the manifest and verified on load.
+* Resharding: restore takes a target sharding pytree, so a checkpoint saved
+  on one mesh restores onto another (elastic scaling path, repro.ft).
+* Retention: ``keep_last`` prunes superseded steps.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import zlib
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaves_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        pid = "__".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        ) or "root"
+        out.append((pid, leaf))
+    return out
+
+
+def save_checkpoint(directory, step: int, state, keep_last: int = 3,
+                    extra: Optional[dict] = None) -> Path:
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for pid, leaf in _leaves_with_paths(state):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"{pid}.npy", arr)
+        manifest["leaves"][pid] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+
+    # retention
+    steps = sorted(p for p in directory.glob("step_*") if p.is_dir()
+                   and not p.name.endswith(".tmp"))
+    for old in steps[:-keep_last]:
+        shutil.rmtree(old)
+    return final
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1])
+        for p in directory.glob("step_*")
+        if p.is_dir() and not p.name.endswith(".tmp")
+    )
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory, step: int, like, shardings=None):
+    """Restore into the structure of ``like``; optionally device_put with a
+    target sharding pytree (resharding across meshes)."""
+    src = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    flat_like = _leaves_with_paths(like)
+    leaves = []
+    for pid, leaf in flat_like:
+        meta = manifest["leaves"].get(pid)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {pid}")
+        arr = np.load(src / f"{pid}.npy")
+        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        if crc != meta["crc32"]:
+            raise IOError(f"checkpoint leaf {pid} corrupt (crc mismatch)")
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state, shardings)
+    return state, manifest
+
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,97 @@
+"""Functional (numeric) emulation of CIM crossbar execution.
+
+Programs the mapped weights into dense m x m array images and executes the
+schedule with crossbar physics: a cycle drives voltages on its wordlines and
+each *read* bitline integrates current from **all** driven rows in that
+column (Ohm + Kirchhoff, paper Fig. 1).  Nothing about block structure is
+assumed at execution time — so any mapping/scheduling bug (lane collision,
+wrong shift, crosstalk between packed diagonals) shows up as a numeric
+mismatch against the pure-JAX Monarch oracle.  This is the reproduction's
+ground-truth test of Sec. III-B2a (rotations/shifts) and Sec. III-C
+(mapping-aware scheduling).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cim.mapping import Mapping
+from repro.cim.scheduling import CycleOp
+
+
+def program_arrays(mapping: Mapping, weights: dict[str, np.ndarray]) -> dict[int, np.ndarray]:
+    """Write weights into array images.
+
+    ``weights[name]`` is the full logical matrix (in_dim x out_dim) of each
+    mapped matrix (dense, or the block-diagonal factor *materialized dense* —
+    zeros off-diagonal).  Placements copy the sub-tile
+    ``W[vec_in_off : +rows, vec_out_off : +cols]`` to (row_off, col_off).
+    """
+    arrays: dict[int, np.ndarray] = {}
+    for info in mapping.matrices.values():
+        w = weights[info.name]
+        assert w.shape == (info.in_dim, info.out_dim), (
+            info.name,
+            w.shape,
+            (info.in_dim, info.out_dim),
+        )
+        for p in info.placements:
+            img = arrays.setdefault(p.array_id, np.zeros((mapping.m, mapping.m), w.dtype))
+            tile = w[p.vec_in_off : p.vec_in_off + p.rows, p.vec_out_off : p.vec_out_off + p.cols]
+            region = img[p.row_off : p.row_off + p.rows, p.col_off : p.col_off + p.cols]
+            if np.any(region != 0):
+                raise AssertionError(
+                    f"placement collision in array {p.array_id} for {info.name}"
+                )
+            img[p.row_off : p.row_off + p.rows, p.col_off : p.col_off + p.cols] = tile
+    return arrays
+
+
+def execute_matmul(
+    mapping: Mapping,
+    arrays: dict[int, np.ndarray],
+    cycles: list[CycleOp],
+    inputs: dict[str, np.ndarray],
+) -> dict[str, np.ndarray]:
+    """Run scheduled cycles with crossbar physics; returns per-matrix outputs.
+
+    ``inputs[name]`` is the logical input vector of each matmul being
+    executed (co-activated groups may contain several matrices).  Partial
+    products accumulate into logical output vectors via the placements'
+    addressing (the scheduler's address generation, Sec. III-C).
+    """
+    outs: dict[str, np.ndarray] = {}
+    for info in mapping.matrices.values():
+        if info.name in inputs:
+            outs[info.name] = np.zeros((info.out_dim,), dtype=np.float64)
+    for c in cycles:
+        img = arrays[c.array_id]
+        m = mapping.m
+        # Wordline voltages: a physical row line is shared by every column,
+        # so co-activated matmuls must agree on the driven values (they share
+        # the input vector by construction — enforced numerically here).
+        v = np.zeros((m,), dtype=np.float64)
+        driven = np.zeros((m,), dtype=bool)
+        for r in c.reads:
+            x = inputs[r.matrix]
+            for d in c.drives:
+                seg = np.asarray(x[d.vec_off : d.vec_off + d.length], dtype=np.float64)
+                rows = slice(d.row_off, d.row_off + d.length)
+                prev = driven[rows]
+                if np.any(prev) and not np.allclose(v[rows][prev], seg[prev]):
+                    raise AssertionError(
+                        f"conflicting drive on array {c.array_id} rows "
+                        f"{d.row_off}..{d.row_off + d.length}: co-activated "
+                        "matmuls must share the input vector"
+                    )
+                v[rows] = seg
+                driven[rows] = True
+        currents = v @ img  # Kirchhoff sum over ALL driven rows per bitline
+        for r in c.reads:
+            outs[r.matrix][r.vec_off : r.vec_off + r.length] += currents[
+                r.col_off : r.col_off + r.length
+            ]
+    return outs
+
+
+__all__ = ["program_arrays", "execute_matmul"]

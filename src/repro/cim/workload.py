@@ -1,0 +1,169 @@
+"""Transformer workload descriptions for the CIM simulator.
+
+The paper evaluates BERT-large (encoder-only, ctx 512), BART-large
+(encoder-decoder, ctx 1024) and GPT-2-medium (decoder-only, ctx 1024); the
+assigned-architecture configs (repro.configs) export the same description via
+``cim_workload()`` so every arch can be pushed through the CIM flow too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from repro.core.monarch import MonarchDims, make_dims
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulDesc:
+    """One parameterized matmul (weights live on CIM arrays)."""
+
+    name: str
+    din: int
+    dout: int
+    input_id: str          # matmuls sharing input_id may be co-activated
+    count: int = 1         # identical instances per layer (e.g. per expert)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    """One repeated layer: parameterized matmuls + fixed DPU ops.
+
+    ``fixed_ops`` maps Table-I op kind -> count per token per layer.
+    ``stages`` lists sequential groups of matmul names; matmuls inside a
+    group are independent (parallel arrays), groups are sequential.
+    """
+
+    matmuls: tuple[MatmulDesc, ...]
+    stages: tuple[tuple[str, ...], ...]
+    fixed_ops: tuple[tuple[str, int], ...]
+    count: int = 1  # how many such layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDesc:
+    name: str
+    d_model: int
+    seq_len: int
+    n_heads: int
+    layers: tuple[LayerDesc, ...]
+    vocab: int = 0
+    tied_head: bool = True
+
+    @property
+    def n_layers(self) -> int:
+        return sum(l.count for l in self.layers)
+
+    def para_matmul_params(self) -> int:
+        return sum(
+            m.din * m.dout * m.count * l.count for l in self.layers for m in l.matmuls
+        )
+
+    def monarch_params(self, policy: str = "paper") -> int:
+        total = 0
+        for l in self.layers:
+            for m in l.matmuls:
+                dims = make_dims(m.din, m.dout, policy=policy)
+                total += dims.params * m.count * l.count
+        return total
+
+    def embedding_params(self) -> int:
+        return self.vocab * self.d_model
+
+    def para_matmul_flops(self) -> int:
+        """Per forward pass of seq_len tokens (dense)."""
+        return 2 * self.seq_len * self.para_matmul_params()
+
+    def monarch_flops(self, policy: str = "paper") -> int:
+        return 2 * self.seq_len * self.monarch_params(policy)
+
+    def nonpara_matmul_flops(self) -> int:
+        """Attention scores + AV (activation-only matmuls, untransformed)."""
+        attn_layers = sum(
+            l.count for l in self.layers if any("wq" in m.name for m in l.matmuls)
+        )
+        cross = sum(
+            l.count for l in self.layers if any("xq" in m.name for m in l.matmuls)
+        )
+        per_layer = 2 * 2 * self.seq_len * self.seq_len * self.d_model
+        return (attn_layers + cross) * per_layer
+
+    def head_flops(self) -> int:
+        return 2 * self.seq_len * self.vocab * self.d_model
+
+
+def _attn_ffn_layer(d: int, ff: int, cross: bool, act: str, count: int) -> LayerDesc:
+    mm = [
+        MatmulDesc("wq", d, d, "x_attn"),
+        MatmulDesc("wk", d, d, "x_attn"),
+        MatmulDesc("wv", d, d, "x_attn"),
+        MatmulDesc("wo", d, d, "attn_out"),
+        MatmulDesc("ffn1", d, ff, "x_ffn"),
+        MatmulDesc("ffn2", ff, d, "ffn_mid"),
+    ]
+    stages = [("wq", "wk", "wv"), ("wo",), ("ffn1",), ("ffn2",)]
+    fixed = [("layernorm", 2), ("add", 2), (act, 1), ("comm", 2)]
+    if cross:
+        mm += [
+            MatmulDesc("xq", d, d, "x_cross"),
+            MatmulDesc("xk", d, d, "enc_out"),
+            MatmulDesc("xv", d, d, "enc_out"),
+            MatmulDesc("xo", d, d, "cross_out"),
+        ]
+        stages = [("wq", "wk", "wv"), ("wo",), ("xq", "xk", "xv"), ("xo",),
+                  ("ffn1",), ("ffn2",)]
+        fixed = [("layernorm", 3), ("add", 3), (act, 1), ("comm", 3)]
+    return LayerDesc(
+        matmuls=tuple(mm), stages=tuple(stages), fixed_ops=tuple(fixed), count=count
+    )
+
+
+def bert_large() -> ModelDesc:
+    return ModelDesc(
+        name="bert-large",
+        d_model=1024,
+        seq_len=512,
+        n_heads=16,
+        vocab=30522,
+        layers=(_attn_ffn_layer(1024, 4096, cross=False, act="gelu", count=24),),
+    )
+
+
+def gpt2_medium() -> ModelDesc:
+    return ModelDesc(
+        name="gpt2-medium",
+        d_model=1024,
+        seq_len=1024,
+        n_heads=16,
+        vocab=50257,
+        layers=(_attn_ffn_layer(1024, 4096, cross=False, act="gelu", count=24),),
+    )
+
+
+def bart_large() -> ModelDesc:
+    return ModelDesc(
+        name="bart-large",
+        d_model=1024,
+        seq_len=1024,
+        n_heads=16,
+        vocab=50265,
+        layers=(
+            _attn_ffn_layer(1024, 4096, cross=False, act="gelu", count=12),
+            _attn_ffn_layer(1024, 4096, cross=True, act="gelu", count=12),
+        ),
+    )
+
+
+PAPER_MODELS = {"bert-large": bert_large, "bart-large": bart_large,
+                "gpt2-medium": gpt2_medium}
+
+
+__all__ = [
+    "MatmulDesc",
+    "LayerDesc",
+    "ModelDesc",
+    "bert_large",
+    "bart_large",
+    "gpt2_medium",
+    "PAPER_MODELS",
+]

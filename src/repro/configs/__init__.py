@@ -1,0 +1,56 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``ALL_ARCHS``.
+
+Each ``<id>.py`` holds the exact published configuration; variants are
+selected with a suffix: ``name``            -> Monarch-sparse (paper policy)
+                        ``name:dense``      -> dense baseline (paper Linear)
+                        ``name:mxu``        -> Monarch with MXU-aligned blocks
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.core.linear import MonarchSpec
+from repro.models.config import ModelConfig
+
+ALL_ARCHS = [
+    "nemotron-4-15b",
+    "minicpm-2b",
+    "gemma2-27b",
+    "codeqwen1_5-7b",
+    "zamba2-7b",
+    "qwen2-moe-a2_7b",
+    "granite-moe-1b-a400m",
+    "seamless-m4t-large-v2",
+    "mamba2-2_7b",
+    "internvl2-76b",
+]
+
+PAPER_MODELS_JAX = ["bert-large-lm", "gpt2-medium"]
+
+
+def _module_name(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    if ":" in name:
+        base, variant = name.split(":", 1)
+    else:
+        base, variant = name, "paper"
+    base = base.replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{_module_name(base)}")
+    cfg: ModelConfig = mod.CONFIG
+    if variant == "dense":
+        return dataclasses.replace(cfg, monarch=MonarchSpec(enable=False))
+    if variant == "mxu":
+        return dataclasses.replace(
+            cfg, monarch=dataclasses.replace(cfg.monarch, enable=True,
+                                             policy="mxu128"))
+    if variant == "paper":
+        return cfg
+    raise ValueError(f"unknown variant {variant!r} for arch {base!r}")
+
+
+__all__ = ["get_config", "ALL_ARCHS", "PAPER_MODELS_JAX"]

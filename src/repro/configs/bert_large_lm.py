@@ -1,0 +1,21 @@
+"""BERT-large-shaped LM (paper model, JAX-side): 24L d=1024 16H d_ff=4096
+vocab=30522.  Used by the D2S examples and kernel benches; the CIM simulator
+has its own encoder workload description in repro.cim.workload."""
+
+from repro.core.linear import MonarchSpec
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="bert-large-lm",
+    d_model=1024,
+    n_layers=24,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=30522,
+    head_dim=64,
+    ffn_type="gelu",
+    norm_type="layernorm",
+    tie_embeddings=True,
+    monarch=MonarchSpec(enable=True, policy="paper"),
+)

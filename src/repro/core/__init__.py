@@ -1,0 +1,28 @@
+"""Core Monarch block-diagonal machinery (the paper's primary contribution)."""
+
+from repro.core.monarch import (  # noqa: F401
+    BlockDiagSpec,
+    MonarchDims,
+    blockdiag_multiply,
+    closest_divisor,
+    init_monarch,
+    make_dims,
+    monarch_multiply,
+    monarch_to_dense,
+    mxu_dims,
+    paper_dims,
+    stage_specs,
+)
+from repro.core.d2s import (  # noqa: F401
+    D2SReport,
+    convert_tree,
+    project_to_monarch,
+    projection_error,
+)
+from repro.core.linear import (  # noqa: F401
+    MonarchSpec,
+    is_monarch,
+    linear_apply,
+    linear_init,
+    linear_out_dim,
+)

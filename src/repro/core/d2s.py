@@ -1,0 +1,135 @@
+"""Dense-to-sparse (D2S) transformation (paper Sec. III-A).
+
+Projects a dense weight matrix W onto the closest Monarch matrix in
+Frobenius norm, *without retraining*, via batched rank-1 SVD (the analytical
+method of Dao et al., Monarch, ICML'22, adopted by the paper).
+
+Derivation (see DESIGN.md Sec. 4): with y = x @ M and the folded convention,
+
+    M[(ki*p + pi), (qi*s + si)] = L[ki, qi, pi] * R[qi, si, ki]
+
+so the 4-D reshape W.reshape(k, p, q, s) sliced at a fixed (ki, qi) is the
+rank-1 outer product L[ki, qi, :] (x) R[qi, :, ki].  The optimal Frobenius
+approximation of each (p x s) slice is its leading singular triple.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.monarch import MonarchDims, make_dims, monarch_to_dense
+
+
+def project_to_monarch(
+    w: jax.Array, dims: Optional[MonarchDims] = None, policy: str = "paper"
+) -> tuple[jax.Array, jax.Array]:
+    """Optimal Frobenius-norm Monarch approximation of dense ``w`` (din, dout).
+
+    Returns the factors (L, R) with shapes (k, q, p) and (q, s, k).
+    """
+    din, dout = w.shape
+    if dims is None:
+        dims = make_dims(din, dout, policy=policy)
+    k, q, p, s = dims.k, dims.q, dims.p, dims.s
+    # (din, dout) -> (k, p, q, s) -> batch the (p, s) slices over (k, q)
+    w4 = w.reshape(k, p, q, s).transpose(0, 2, 1, 3)  # (k, q, p, s)
+    # Batched SVD; we only need the leading triple.  full_matrices=False keeps
+    # the factors at (p, min) / (min, s).
+    u, sv, vt = jnp.linalg.svd(w4, full_matrices=False)
+    sigma0 = sv[..., 0]                      # (k, q)
+    u0 = u[..., :, 0]                        # (k, q, p)
+    v0 = vt[..., 0, :]                       # (k, q, s)
+    root = jnp.sqrt(jnp.maximum(sigma0, 0.0))
+    L = u0 * root[..., None]                 # (k, q, p)
+    Rkqs = v0 * root[..., None]              # (k, q, s)
+    R = Rkqs.transpose(1, 2, 0)              # (q, s, k)
+    return L, R
+
+
+def projection_error(w: jax.Array, L: jax.Array, R: jax.Array) -> jax.Array:
+    """Relative Frobenius error ||W - M||_F / ||W||_F of the projection."""
+    m = monarch_to_dense(L, R)
+    return jnp.linalg.norm(w - m) / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+
+@dataclasses.dataclass
+class D2SReport:
+    """Bookkeeping for one converted layer (feeds Fig. 2b style accounting)."""
+
+    name: str
+    din: int
+    dout: int
+    dims: MonarchDims
+    rel_error: float
+
+    @property
+    def dense_params(self) -> int:
+        return self.din * self.dout
+
+    @property
+    def sparse_params(self) -> int:
+        return self.dims.params
+
+    @property
+    def compression(self) -> float:
+        return self.dense_params / max(self.sparse_params, 1)
+
+
+def convert_tree(
+    params: Any,
+    select: Any,
+    policy: str = "paper",
+    nblocks: Optional[int] = None,
+) -> tuple[Any, list[D2SReport]]:
+    """D2S-convert every selected 2-D weight in a parameter pytree.
+
+    ``select(path, leaf) -> bool`` marks the *parameterized matmuls* (paper
+    Fig. 2b: attention projections + FFN weights; attention-score and AV
+    matmuls have no weights and are untouched by construction).
+
+    Returns the new pytree — selected leaves replaced by
+    ``{"L": ..., "R": ...}`` dicts — plus per-layer reports.
+    """
+    reports: list[D2SReport] = []
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    new_leaves = []
+    for path, leaf in flat:
+        pathstr = jax.tree_util.keystr(path)
+        if (
+            hasattr(leaf, "ndim")
+            and leaf.ndim >= 2
+            and select(pathstr, leaf)
+        ):
+            *lead, din, dout = leaf.shape
+            dims = make_dims(din, dout, policy=policy, nblocks=nblocks)
+            if lead:
+                # scan-stacked layers / expert stacks: project every slice
+                flat_w = leaf.reshape(-1, din, dout)
+                L, R = jax.vmap(lambda m: project_to_monarch(m, dims))(flat_w)
+                errs = jax.vmap(projection_error)(flat_w, L, R)
+                err = float(jnp.max(errs))
+                L = L.reshape(*lead, *dims.l_shape)
+                R = R.reshape(*lead, *dims.r_shape)
+            else:
+                L, R = project_to_monarch(leaf, dims)
+                err = float(projection_error(leaf, L, R))
+            reports.append(
+                D2SReport(name=pathstr, din=din, dout=dout, dims=dims, rel_error=err)
+            )
+            new_leaves.append({"L": L, "R": R})
+        else:
+            new_leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), reports
+
+
+__all__ = [
+    "project_to_monarch",
+    "projection_error",
+    "convert_tree",
+    "D2SReport",
+]

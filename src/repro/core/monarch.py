@@ -1,0 +1,279 @@
+"""Monarch block-diagonal factorization: the paper's core sparse structure.
+
+A Monarch matrix M (paper Eq. 1, M = P.L.P.R.P) is the product of two
+block-diagonal matrices interleaved with stride permutations.  We implement
+the *folded* convention (paper Sec. III-B3): the permutations are absorbed
+into the reshape/transpose of the multiply, so no explicit permutation
+matrices are ever materialized — the TPU analogue of folding P into the
+crossbar layout.
+
+Conventions (y = x @ M, x: (..., din), y: (..., dout)):
+
+    x   -> reshape (..., k, p)                      k * p == din
+    u   =  einsum('kqp,...kp->...kq', L)            L: (k, q, p)   stage 1
+    ut  =  swapaxes(u, -1, -2)                      stride permutation P
+    y   =  einsum('qsk,...qk->...qs', R)            R: (q, s, k)   stage 2
+    y   -> reshape (..., q * s)                     q * s == dout
+
+The square case k = p = q = s = sqrt(n) recovers the paper's b = sqrt(n)
+blocks.  Parameters: k*q*p + q*s*k  (vs din*dout dense); for square n x n
+this is 2 * n^{3/2}, a sqrt(n)/2 compression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Dimension bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def closest_divisor(n: int, target: int) -> int:
+    """Divisor of ``n`` closest to ``target`` (ties broken downward)."""
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    best, best_dist = 1, abs(1 - target)
+    for d in range(1, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            for cand in (d, n // d):
+                dist = abs(cand - target)
+                if dist < best_dist or (dist == best_dist and cand < best):
+                    best, best_dist = cand, dist
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class MonarchDims:
+    """Shape bookkeeping for one Monarch-factorized matmul.
+
+    din  = k * p   (stage-1: k blocks, each p -> q)
+    dmid = k * q   (the permuted intermediate)
+    dout = q * s   (stage-2: q blocks, each k -> s)
+    """
+
+    din: int
+    dout: int
+    k: int
+    q: int
+
+    def __post_init__(self) -> None:
+        if self.din % self.k:
+            raise ValueError(f"k={self.k} must divide din={self.din}")
+        if self.dout % self.q:
+            raise ValueError(f"q={self.q} must divide dout={self.dout}")
+
+    @property
+    def p(self) -> int:
+        return self.din // self.k
+
+    @property
+    def s(self) -> int:
+        return self.dout // self.q
+
+    @property
+    def dmid(self) -> int:
+        return self.k * self.q
+
+    @property
+    def l_shape(self) -> tuple[int, int, int]:
+        return (self.k, self.q, self.p)
+
+    @property
+    def r_shape(self) -> tuple[int, int, int]:
+        return (self.q, self.s, self.k)
+
+    @property
+    def params(self) -> int:
+        return self.k * self.q * self.p + self.q * self.s * self.k
+
+    @property
+    def dense_params(self) -> int:
+        return self.din * self.dout
+
+    @property
+    def compression(self) -> float:
+        return self.dense_params / self.params
+
+    def flops(self, tokens: int) -> int:
+        """Multiply-add FLOPs (2 * MACs) for ``tokens`` row-vectors."""
+        return 2 * tokens * self.params
+
+    def dense_flops(self, tokens: int) -> int:
+        return 2 * tokens * self.dense_params
+
+
+def paper_dims(din: int, dout: int) -> MonarchDims:
+    """Paper policy: square-ish blocks b ~= sqrt(din) (b = sqrt(n) exactly
+    when din is a perfect square, as in all three paper models)."""
+    b = closest_divisor(din, int(round(math.sqrt(din))))
+    k = din // b
+    # stage-2 blocks: keep q == k when possible (paper's square L/R), else
+    # nearest divisor of dout.
+    q = k if dout % k == 0 else closest_divisor(dout, k)
+    return MonarchDims(din=din, dout=dout, k=k, q=q)
+
+
+def mxu_dims(din: int, dout: int, lane: int = 128) -> MonarchDims:
+    """TPU co-design policy (DESIGN.md Sec. 3): block dims multiples of the
+    MXU lane width where possible — the analogue of matching the Monarch
+    block size b to the CIM array dimension m (paper Sec. IV-A)."""
+    p = closest_divisor(din, lane)
+    s = closest_divisor(dout, lane)
+    return MonarchDims(din=din, dout=dout, k=din // p, q=dout // s)
+
+
+def make_dims(
+    din: int,
+    dout: int,
+    policy: str = "paper",
+    nblocks: Optional[int] = None,
+) -> MonarchDims:
+    if nblocks is not None:
+        k = closest_divisor(din, nblocks)
+        q = closest_divisor(dout, nblocks)
+        return MonarchDims(din=din, dout=dout, k=k, q=q)
+    if policy == "paper":
+        return paper_dims(din, dout)
+    if policy == "mxu128":
+        return mxu_dims(din, dout)
+    raise ValueError(f"unknown monarch dims policy: {policy}")
+
+
+# ---------------------------------------------------------------------------
+# Multiplication
+# ---------------------------------------------------------------------------
+
+
+def blockdiag_multiply(x: jax.Array, w: jax.Array, precision=None) -> jax.Array:
+    """x: (..., k, p) times block-diagonal w: (k, q, p) -> (..., k, q)."""
+    return jnp.einsum("kqp,...kp->...kq", w, x, precision=precision)
+
+
+def monarch_multiply(
+    x: jax.Array,
+    L: jax.Array,
+    R: jax.Array,
+    precision=None,
+) -> jax.Array:
+    """y = x @ M with M the Monarch matrix defined by factors (L, R).
+
+    The stride permutations of the paper's M = P.L.P.R.P are folded into the
+    reshape/swapaxes (Sec. III-B3): no data movement beyond a layout change.
+
+    Distribution: the intermediate carries logical axis tags ("mnr_k"/"mnr_q")
+    so the active rules preset selects the TP scheme — "psum" (stage-2
+    contraction sharded, Megatron-pair all-reduce) or "a2a" (k->q all_to_all
+    with the output landing block-aligned, the paper's rotation-symmetry
+    analogue; DESIGN.md Sec. 5).
+    """
+    from repro.sharding import logical  # lazy: core stays importable alone
+
+    k, q, p = L.shape
+    q2, s, k2 = R.shape
+    if (q2, k2) != (q, k):
+        raise ValueError(f"incompatible factors L{L.shape} R{R.shape}")
+    *batch, din = x.shape
+    if din != k * p:
+        raise ValueError(f"x last dim {din} != k*p = {k * p}")
+    nb = len(batch)
+    u = blockdiag_multiply(x.reshape(*batch, k, p), L, precision=precision)
+    u = logical(u, *([None] * nb), "mnr_k", "mnr_q")
+    ut = jnp.swapaxes(u, -1, -2)  # (..., q, k): the folded permutation
+    ut = logical(ut, *([None] * nb), "mnr_q2", "mnr_k2")
+    y = jnp.einsum("qsk,...qk->...qs", R, ut, precision=precision)
+    return y.reshape(*batch, q * s)
+
+
+def monarch_to_dense(L: jax.Array, R: jax.Array) -> jax.Array:
+    """Materialize the dense (din, dout) matrix represented by (L, R).
+
+    W[(ki*p + pi), (qi*s + si)] = L[ki, qi, pi] * R[qi, si, ki]
+    (derived from the multiply above; used by tests and the D2S oracle).
+    """
+    k, q, p = L.shape
+    _, s, _ = R.shape
+    w4 = jnp.einsum("kqp,qsk->kpqs", L, R)
+    return w4.reshape(k * p, q * s)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_monarch(
+    key: jax.Array,
+    dims: MonarchDims,
+    dtype: Any = jnp.float32,
+    scale: Optional[float] = None,
+) -> dict[str, jax.Array]:
+    """Initialize Monarch factors so the composed map matches dense
+    1/sqrt(din) variance: var(L) = 1/p, var(R) = 1/k  =>  var(M) ~= 1/din."""
+    kl, kr = jax.random.split(key)
+    l_std = math.sqrt(1.0 / dims.p)
+    r_std = math.sqrt(1.0 / dims.k)
+    if scale is not None:
+        # fold an output-scale adjustment into stage 2
+        r_std *= scale
+    L = (jax.random.normal(kl, dims.l_shape) * l_std).astype(dtype)
+    R = (jax.random.normal(kr, dims.r_shape) * r_std).astype(dtype)
+    return {"L": L, "R": R}
+
+
+# ---------------------------------------------------------------------------
+# Block-structure description consumed by the CIM mapper
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDiagSpec:
+    """Shape-only description of one block-diagonal factor, as seen by the
+    CIM mapping layer (repro.cim.mapping): ``nblocks`` blocks, each
+    ``rows x cols`` (rows = crossbar wordlines = input dim of the block)."""
+
+    nblocks: int
+    rows: int
+    cols: int
+    name: str = ""
+
+    @property
+    def nnz(self) -> int:
+        return self.nblocks * self.rows * self.cols
+
+    @property
+    def total_rows(self) -> int:
+        return self.nblocks * self.rows
+
+    @property
+    def total_cols(self) -> int:
+        return self.nblocks * self.cols
+
+
+def stage_specs(dims: MonarchDims, name: str = "") -> tuple[BlockDiagSpec, BlockDiagSpec]:
+    """The two block-diagonal factors of a Monarch matmul as mapper specs."""
+    l_spec = BlockDiagSpec(dims.k, dims.p, dims.q, name=f"{name}/L")
+    r_spec = BlockDiagSpec(dims.q, dims.k, dims.s, name=f"{name}/R")
+    return l_spec, r_spec
+
+
+__all__ = [
+    "MonarchDims",
+    "BlockDiagSpec",
+    "blockdiag_multiply",
+    "monarch_multiply",
+    "monarch_to_dense",
+    "init_monarch",
+    "make_dims",
+    "paper_dims",
+    "mxu_dims",
+    "closest_divisor",
+    "stage_specs",
+]

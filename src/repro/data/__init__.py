@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic-but-learnable LM streams, sharded + prefetched."""
+
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    make_batches,
+    synthetic_stream,
+)

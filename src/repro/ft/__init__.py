@@ -1,0 +1,13 @@
+"""Fault tolerance: heartbeats, elastic remesh planning, straggler
+mitigation, gradient compression."""
+
+from repro.ft.coordinator import (  # noqa: F401
+    ElasticPlan,
+    HeartbeatRegistry,
+    StragglerMonitor,
+    plan_elastic_remesh,
+)
+from repro.ft.compression import (  # noqa: F401
+    compress_state_init,
+    compressed_gradients,
+)

@@ -1,0 +1,54 @@
+"""Gradient compression with error feedback (int8 quantized all-reduce).
+
+Cross-pod gradient sync rides the slow DCN link; int8 quantization cuts the
+bytes 4x vs fp32 (2x vs bf16).  Error feedback (Seide et al. 2014 /
+Karimireddy et al. 2019) accumulates the quantization residual locally and
+re-injects it next step, preserving convergence.
+
+Implemented as a train-step transform: ``compressed_gradients`` wraps the
+raw grads; under pjit the decompressed values all-reduce as usual but the
+representable precision matches what an int8-compressed wire would carry —
+on a real multi-pod deployment the compress/decompress pair brackets the
+DCN all-reduce itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_state_init(params):
+    """Error-feedback residual buffers, one per parameter leaf."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def compressed_gradients(grads, ef_state):
+    """Returns (decompressed grads, new error-feedback state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(g32)
+        deq = _dequantize(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+__all__ = ["compress_state_init", "compressed_gradients"]

@@ -1,0 +1,131 @@
+"""Cluster control plane: heartbeats, failure detection, elastic remesh
+plans, straggler mitigation.
+
+On a real deployment each host runs the worker side (report_heartbeat per
+step) and rank 0 runs the coordinator; here the logic is in-process and unit
+tested, and the Trainer exercises it every step.  Recovery contract:
+
+  failure detected -> pick the largest feasible mesh from the survivors ->
+  restore the latest checkpoint resharded onto the new mesh (checkpoints are
+  mesh-agnostic, repro.checkpoint) -> rescale the data pipeline's host
+  sharding -> continue.
+
+Straggler mitigation follows the backup-worker pattern: ranks whose rolling
+step time exceeds ``threshold x`` the fleet median are flagged; the plan
+swaps them for hot spares when available, else shrinks the mesh like a
+failure (better 1/16 fewer chips than a 2x slower global step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Optional
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self._last: dict[int, float] = {}
+        self._step: dict[int, int] = {}
+
+    def report(self, rank: int, step: int, now: Optional[float] = None):
+        self._last[rank] = time.monotonic() if now is None else now
+        self._step[rank] = step
+
+    def failed_ranks(self, now: Optional[float] = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(
+            r for r, t in self._last.items() if now - t > self.timeout_s
+        )
+
+    def fleet_step(self) -> int:
+        return min(self._step.values()) if self._step else 0
+
+
+class StragglerMonitor:
+    """Rolling per-rank step times; flags ranks slower than
+    ``threshold x`` the fleet median."""
+
+    def __init__(self, window: int = 16, threshold: float = 1.5):
+        self.window = window
+        self.threshold = threshold
+        self._times: dict[int, deque] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def report(self, rank: int, step_time_s: float):
+        self._times[rank].append(step_time_s)
+
+    def _avg(self, rank: int) -> float:
+        t = self._times[rank]
+        return sum(t) / len(t) if t else 0.0
+
+    def stragglers(self) -> list[int]:
+        if len(self._times) < 2:
+            return []
+        avgs = sorted(self._avg(r) for r in self._times)
+        median = avgs[len(avgs) // 2]
+        if median <= 0:
+            return []
+        return sorted(
+            r for r in self._times if self._avg(r) > self.threshold * median
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """What the runtime does after failures/stragglers are confirmed."""
+
+    old_data_parallel: int
+    new_data_parallel: int
+    replaced_by_spares: tuple[int, ...]
+    evicted_ranks: tuple[int, ...]
+    resume_step: int
+    action: str  # "none" | "swap_spares" | "shrink" | "halt"
+
+    @property
+    def mesh_changed(self) -> bool:
+        return self.new_data_parallel != self.old_data_parallel
+
+
+def plan_elastic_remesh(
+    data_parallel: int,
+    model_parallel: int,
+    bad_ranks: list[int],
+    n_spares: int = 0,
+    resume_step: int = 0,
+    min_data_parallel: int = 1,
+) -> ElasticPlan:
+    """Choose the recovery action for ``bad_ranks`` failed/straggling hosts.
+
+    Spares substitute 1:1 first.  Remaining losses shrink the data axis to
+    the largest size that (a) the surviving host count supports and (b)
+    keeps the global batch divisible (power-of-two style divisor ladder) —
+    model_parallel is never shrunk (TP is latency-critical and weights are
+    already sharded that way)."""
+    if not bad_ranks:
+        return ElasticPlan(data_parallel, data_parallel, (), (),
+                           resume_step, "none")
+    spared = tuple(bad_ranks[:n_spares])
+    evicted = tuple(bad_ranks[n_spares:])
+    if not evicted:
+        return ElasticPlan(data_parallel, data_parallel, spared, (),
+                           resume_step, "swap_spares")
+    survivors = data_parallel - len(evicted)
+    new_dp = survivors
+    while new_dp >= min_data_parallel and data_parallel % new_dp != 0:
+        new_dp -= 1
+    if new_dp < min_data_parallel:
+        return ElasticPlan(data_parallel, 0, spared, evicted, resume_step,
+                           "halt")
+    return ElasticPlan(data_parallel, new_dp, spared, evicted, resume_step,
+                       "shrink")
+
+
+__all__ = [
+    "HeartbeatRegistry",
+    "StragglerMonitor",
+    "ElasticPlan",
+    "plan_elastic_remesh",
+]

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused two-stage Monarch matmul.
+
+y = reshape( R-stage( P( L-stage( reshape(x) ) ) ) )
+
+This is the TPU-native analogue of the paper's capacity-optimized DenseMap
+(DESIGN.md Sec. 3): both block-diagonal stages execute per token tile with
+the intermediate **resident in VMEM** — it never round-trips HBM (the
+paper's "weights stay in the array; outputs stream into the next stage's
+DACs", Sec. III-B3) — and the stride permutation P is a register/VMEM
+transpose folded between the two dots (the paper's single remaining
+permutation, folded into addressing).
+
+Grid: (T // bT,).  VMEM working set: bT*din + k*q*p + q*s*k + bT*dmid +
+bT*dout floats; ops.monarch_mm falls back to two ``bdmm`` calls when the
+factors alone exceed the VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_T = 128
+VMEM_BUDGET_BYTES = 10 * 2**20  # conservative per-core VMEM for weights
+
+
+def _monarch_kernel(x_ref, l_ref, r_ref, o_ref):
+    # x: (bT, din) -> (bT, k, p); L: (k, q, p); R: (q, s, k)
+    L = l_ref[...]
+    R = r_ref[...]
+    k, q, p = L.shape
+    _, s, _ = R.shape
+    bT = x_ref.shape[0]
+    x = x_ref[...].reshape(bT, k, p)
+    # stage 1: batch over k -> (k, bT, q)
+    u = jax.lax.dot_general(
+        x, L,
+        dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    # folded stride permutation P: (k, bT, q) -> (q, bT, k): a VMEM transpose
+    ut = jnp.transpose(u, (2, 1, 0)).astype(x.dtype)
+    # stage 2: batch over q, contract k -> (q, bT, s)
+    y = jax.lax.dot_general(
+        ut, R,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    # (q, bT, s) -> (bT, q*s)
+    o_ref[...] = jnp.transpose(y, (1, 0, 2)).reshape(bT, q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "interpret"))
+def monarch_fused(x: jax.Array, L: jax.Array, R: jax.Array, *,
+                  tile_t: int = DEFAULT_TILE_T,
+                  interpret: bool = False) -> jax.Array:
+    """x: (T, din) -> (T, dout) with din = k*p, dout = q*s."""
+    T, din = x.shape
+    k, q, p = L.shape
+    q2, s, k2 = R.shape
+    assert (q2, k2) == (q, k) and k * p == din, (x.shape, L.shape, R.shape)
+    bT = min(tile_t, T)
+    pad = (-T) % bT
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = T + pad
+    out = pl.pallas_call(
+        _monarch_kernel,
+        grid=(Tp // bT,),
+        in_specs=[
+            pl.BlockSpec((bT, din), lambda t: (t, 0)),
+            pl.BlockSpec((k, q, p), lambda t: (0, 0, 0)),
+            pl.BlockSpec((q, s, k), lambda t: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bT, q * s), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, q * s), x.dtype),
+        interpret=interpret,
+    )(x, L, R)
+    return out[:T] if pad else out
+
+
+def fused_fits(L_shape, R_shape, dtype_bytes: int = 4) -> bool:
+    k, q, p = L_shape
+    _, s, _ = R_shape
+    return (k * q * p + q * s * k) * dtype_bytes <= VMEM_BUDGET_BYTES
+
+
+__all__ = ["monarch_fused", "fused_fits", "VMEM_BUDGET_BYTES"]

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``monarch_mm`` is what ``repro.core.linear`` dispatches to when
+``MonarchSpec.backend == "pallas"``: it flattens leading batch dims, picks
+the fused two-stage kernel when both factors fit the VMEM budget (the
+DenseMap-analogue fast path), and otherwise runs the two ``bdmm`` stages
+with the folded permutation in between.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on TPU
+the same BlockSpecs compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bdmm import bdmm
+from repro.kernels.monarch import fused_fits, monarch_fused
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def monarch_mm(x: jax.Array, L: jax.Array, R: jax.Array) -> jax.Array:
+    """y = x @ M for Monarch factors; x: (..., k*p) -> (..., q*s)."""
+    *batch, din = x.shape
+    k, q, p = L.shape
+    _, s, _ = R.shape
+    xt = x.reshape(-1, din)
+    interp = _interpret()
+    if fused_fits(L.shape, R.shape, dtype_bytes=x.dtype.itemsize):
+        y = monarch_fused(xt, L, R, interpret=interp)
+    else:  # staged: two bdmm calls + folded permutation (layout change)
+        u = bdmm(xt.reshape(-1, k, p), L, interpret=interp)   # (T, k, q)
+        ut = jnp.swapaxes(u, -1, -2)                          # (T, q, k)
+        y = bdmm(ut, R, interpret=interp).reshape(-1, q * s)  # (T, q, s)
+    return y.reshape(*batch, q * s)
+
+
+def bdmm_mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Public block-diagonal matmul: x (..., k, p) @ w (k, q, p)."""
+    *batch, k, p = x.shape
+    y = bdmm(x.reshape(-1, k, p), w, interpret=_interpret())
+    return y.reshape(*batch, k, w.shape[1])
+
+
+__all__ = ["monarch_mm", "bdmm_mm"]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (independent of kernel code)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bdmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (T, k, p), w: (k, q, p) -> (T, k, q)."""
+    return jnp.einsum("tkp,kqp->tkq", x, w)
+
+
+def monarch_ref(x: jax.Array, L: jax.Array, R: jax.Array) -> jax.Array:
+    """x: (T, k*p) -> (T, q*s): the folded Monarch product (paper Eq. 1
+    with permutations absorbed into reshape/transpose)."""
+    T, _ = x.shape
+    k, q, p = L.shape
+    _, s, _ = R.shape
+    u = jnp.einsum("kqp,tkp->tkq", L, x.reshape(T, k, p))
+    ut = jnp.swapaxes(u, -1, -2)  # P
+    y = jnp.einsum("qsk,tqk->tqs", R, ut)
+    return y.reshape(T, q * s)
+
+
+__all__ = ["bdmm_ref", "monarch_ref"]

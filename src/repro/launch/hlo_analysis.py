@@ -1,0 +1,166 @@
+"""HLO-text analysis: collective bytes + roofline terms.
+
+``collective_bytes`` parses optimized HLO (``compiled.as_text()``) and sums
+operand bytes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute.  cost_analysis() and text both count ``while`` (scan)
+bodies ONCE (verified empirically: scan flops = unrolled/N), so cell totals
+are assembled as   full + (trip - 1) x body   from a separate body compile
+(DESIGN.md Sec. 7).
+
+Roofline constants (TPU v5e-like target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (per-chip effective, one link)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _op_collective(line: str) -> Optional[str]:
+    for c in _COLLECTIVES:
+        if f"{c}(" in line or f"{c}-start(" in line:
+            return c
+    return None
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Bytes moved per collective kind (operand sizes; loop bodies counted
+    once — apply trip-count correction externally)."""
+    out: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("//"):
+            continue
+        kind = _op_collective(line)
+        if kind is None:
+            continue
+        # operand shapes: everything inside the op's parens; fall back to the
+        # output shape (lhs of '=') when operands are printed bare.
+        eq = line.find("=")
+        paren = line.find("(", eq)
+        operand_str = line[paren + 1 :] if paren >= 0 else ""
+        shapes = _SHAPE_RE.findall(operand_str)
+        if not shapes:
+            shapes = _SHAPE_RE.findall(line[:eq])
+        total = sum(
+            _shape_bytes(dt, dims)
+            for dt, dims in shapes
+            if dt in _DTYPE_BYTES
+        )
+        out[kind] += total
+    return dict(out)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-step roofline terms in seconds.
+
+    ``hlo_flops/hlo_bytes/coll_bytes`` are PER-DEVICE quantities — the
+    SPMD-partitioned module that cost_analysis() sees is the per-device
+    program (verified: granite hlo_flops x 256 matches the analytic global
+    estimate).  ``model_flops`` is GLOBAL (6*N*D / 2*N*D)."""
+
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    n_chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the step's roofline-limited time:
+        MODEL_FLOPS-time / max(term) — the score the perf loop drives up."""
+        denom = max(self.t_compute, self.t_memory, self.t_collective)
+        if denom <= 0:
+            return 0.0
+        return (self.model_flops / (self.n_chips * PEAK_FLOPS)) / denom
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.hlo_flops * self.n_chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def cost_terms(compiled) -> tuple[float, float]:
+    """(flops, bytes-accessed) from a compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    # bytes accessed: prefer the aggregate key; otherwise sum operand keys
+    if "bytes accessed" in ca:
+        byts = float(ca["bytes accessed"])
+    else:
+        byts = float(sum(v for k, v in ca.items()
+                         if k.startswith("bytes accessed")))
+    return flops, byts
+
+
+__all__ = [
+    "collective_bytes", "cost_terms", "RooflineTerms",
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+]

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain 512 placeholder host devices (dryrun.py line 1-2).
+
+Mesh layout (DESIGN.md Sec. 5):
+  single-pod:  (16, 16)        ("data", "model")
+  multi-pod:   (2, 16, 16)     ("pod", "data", "model")
+The "pod" axis is pure data parallelism whose gradient all-reduce is the
+only cross-pod (DCN) collective; "data" carries DP + FSDP (ZeRO-3
+parameter/optimizer sharding); "model" carries TP / EP / monarch block
+parallelism within an ICI domain.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Single-device mesh for CPU smoke runs of the launch stack."""
+    n = len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,11 @@
+"""Model zoo: dense/GQA, local-global, MoE, Mamba2/SSD, hybrid, enc-dec."""
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)

@@ -1,0 +1,251 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Implements the chunked SSD algorithm for train/prefill (quadratic within a
+chunk, linear state passing across chunks via ``lax.scan``) and the O(1)
+recurrent step for decode.  ``ssd_reference`` is the sequential oracle used
+by the tests.  The in/out projections are *parameterized matmuls* and route
+through ``repro.core.linear`` — i.e. they are Monarch-factorizable (the
+paper's technique applies to the SSM family's dominant weights, DESIGN.md
+Sec. 6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import linear_apply, linear_init
+from repro.models.config import ModelConfig
+from repro.sharding import logical
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + nheads
+    lo, hi = s.a_init_range
+    a_init = jax.random.uniform(ks[2], (nheads,), minval=lo, maxval=hi)
+    return {
+        "in_proj": linear_init(ks[0], d, d_in_proj, spec=cfg.monarch),
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim))
+        * (1.0 / math.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((nheads,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[3], (nheads,), minval=math.log(1e-3), maxval=math.log(1e-1))))),
+        "norm_scale": jnp.ones((d_inner,)),
+        "out_proj": linear_init(ks[4], d_inner, d, spec=cfg.monarch,
+                                w_init_scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j < k <= i} a_k."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    x: (b, S, H, P)   dt: (b, S, H)   A: (H,) negative
+    B, C: (b, S, G, N) with G groups, heads H = G * (H//G)
+    Returns (y: (b, S, H, P), final_state: (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    f32 = jnp.float32
+    xq = x.reshape(b, nc, Q, H, P).astype(f32)
+    dtq = dt.reshape(b, nc, Q, H).astype(f32)
+    Bq = jnp.repeat(B.reshape(b, nc, Q, G, N), rep, axis=3).astype(f32)  # (b,nc,Q,H,N)
+    Cq = jnp.repeat(C.reshape(b, nc, Q, G, N), rep, axis=3).astype(f32)
+
+    a = dtq * A.astype(f32)[None, None, None, :]          # (b,nc,Q,H)
+    a_hqt = jnp.moveaxis(a, -1, 2)                        # (b,nc,H,Q)
+    Lseg = _segsum(a_hqt)                                 # (b,nc,H,Q,Q)
+    Ldec = jnp.exp(Lseg)
+
+    xdt = xq * dtq[..., None]                             # (b,nc,Q,H,P)
+
+    # intra-chunk (diagonal blocks): y[i] = sum_{j<=i} C_i.B_j decay(i,j) xdt_j
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cq, Bq) * Ldec
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, xdt)
+
+    # chunk state contributions: S_c = sum_j decay(last, j) B_j (x) xdt_j
+    a_cum = jnp.cumsum(a_hqt, axis=-1)                    # (b,nc,H,Q)
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)       # (b,nc,H,Q)
+    S_c = jnp.einsum("bchq,bcqhn,bcqhp->bchpn", decay_to_end, Bq, xdt)
+    chunk_decay = jnp.exp(a_cum[..., -1])                 # (b,nc,H)
+
+    # inter-chunk recurrence
+    h0 = (
+        jnp.zeros((b, H, P, N), dtype=f32)
+        if init_state is None
+        else init_state.astype(f32)
+    )
+
+    def step(h, inputs):
+        s_c, dec = inputs  # (b,H,P,N), (b,H)
+        h_prev = h
+        h = h * dec[..., None, None] + s_c
+        return h, h_prev
+
+    states_in = (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_prevs = jax.lax.scan(step, h0, states_in)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (b,nc,H,P,N)
+
+    # inter-chunk outputs: y_off[i] = C_i exp(cum_a_i) h_{c-1}
+    in_decay = jnp.exp(a_cum)                             # (b,nc,H,Q)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bchq->bcqhp", Cq, h_prevs, in_decay
+    )
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Sequential oracle: h_t = h_{t-1} exp(A dt_t) + dt_t B_t (x) x_t."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(B, rep, axis=2).astype(f32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(f32)
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None])
+    decay = jnp.exp(dt.astype(f32) * A.astype(f32)[None, None, :])  # (b,S,H)
+
+    def step(h, t):
+        h = h * decay[:, t][..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bh[:, t], xdt[:, t]
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, P, N), dtype=f32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xc, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1,
+    )
+    return z, xc, B, C, dt
+
+
+def mamba_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,
+    backend: str = "einsum",
+) -> tuple[jax.Array, Optional[dict]]:
+    """Full Mamba2 block.  ``cache`` = {"conv": (B, d_conv-1, conv_dim),
+    "ssm": (B, H, P, N)} enables O(1) single-token decode."""
+    s = cfg.ssm
+    bsz, S, d = x.shape
+    d_inner, nheads, conv_dim = _dims(cfg)
+    P = s.head_dim
+
+    zxbcdt = linear_apply(params["in_proj"], x, backend=backend)
+    z, xc, B, C, dt = _split_proj(cfg, zxbcdt)
+    xBC = jnp.concatenate([xc, B, C], axis=-1)  # (b,S,conv_dim)
+
+    new_cache = None
+    if cache is None:
+        # causal depthwise conv via padding
+        pad = jnp.zeros((bsz, s.d_conv - 1, conv_dim), dtype=xBC.dtype)
+        xpad = jnp.concatenate([pad, xBC], axis=1)
+        windows = jnp.stack(
+            [xpad[:, i : i + S] for i in range(s.d_conv)], axis=2
+        )  # (b,S,d_conv,conv)
+        xBC = jnp.einsum("bskc,kc->bsc", windows, params["conv_w"]) + params["conv_b"]
+        xBC = jax.nn.silu(xBC)
+    else:
+        conv_state = cache["conv"]  # (b, d_conv-1, conv)
+        window = jnp.concatenate([conv_state, xBC], axis=1)  # (b,d_conv,conv)
+        out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+        xBC = jax.nn.silu(out)[:, None, :]
+        new_conv = window[:, 1:, :]
+
+    xc2, B2, C2 = jnp.split(
+        xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1
+    )
+    xh = xc2.reshape(bsz, -1, nheads, P)
+    Bh = B2.reshape(bsz, -1, s.n_groups, s.d_state)
+    Ch = C2.reshape(bsz, -1, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,S,H)
+    A = -jnp.exp(params["A_log"])
+
+    xh = logical(xh, "batch", "seq", "ssm_heads", None)
+    if cache is None:
+        y, _ = ssd_chunked(xh, dtv, A, Bh, Ch, chunk=s.chunk)
+    else:
+        # recurrent step (S == 1)
+        h = cache["ssm"].astype(jnp.float32)  # (b,H,P,N)
+        rep = nheads // s.n_groups
+        Bt = jnp.repeat(Bh[:, 0], rep, axis=1).astype(jnp.float32)  # (b,H,N)
+        Ct = jnp.repeat(Ch[:, 0], rep, axis=1).astype(jnp.float32)
+        dt0 = dtv[:, 0]                                              # (b,H)
+        dec = jnp.exp(dt0 * A[None, :])
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bt, (xh[:, 0].astype(jnp.float32) * dt0[..., None])
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h)[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "ssm": h.astype(cache["ssm"].dtype)}
+
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(bsz, -1, d_inner)
+    # gated RMSNorm (Mamba2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+    y = y * params["norm_scale"]
+    y = logical(y, "batch", "seq", "d_inner")
+    out = linear_apply(params["out_proj"], y, backend=backend)
+    return logical(out, "batch", "seq", "embed"), new_cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype=dtype),
+        "ssm": jnp.zeros((batch, nheads, s.head_dim, s.d_state), dtype=jnp.float32),
+    }
+
+
+__all__ = [
+    "mamba_init",
+    "mamba_apply",
+    "mamba_cache_init",
+    "ssd_chunked",
+    "ssd_reference",
+]

@@ -1,0 +1,4 @@
+"""Optimizers and LR schedules (pure JAX, optax-style interface)."""
+
+from repro.optim.adamw import adamw, apply_updates, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import cosine_schedule, wsd_schedule  # noqa: F401

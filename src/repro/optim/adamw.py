@@ -1,0 +1,102 @@
+"""AdamW with decoupled weight decay and global-norm clipping (pure JAX).
+
+optax-style: ``init(params) -> state``; ``update(grads, state, params) ->
+(updates, state)``.  The moment tensors inherit the parameter shardings
+(same pytree structure), so FSDP/TP placement of optimizer state follows
+the parameter rules for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: any
+    nu: any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(
+    lr: Union[float, Callable[[jax.Array], jax.Array]],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+    decay_mask: Optional[Callable[[tuple, jax.Array], bool]] = None,
+) -> Optimizer:
+    """``decay_mask(path, leaf) -> bool`` selects leaves for weight decay
+    (default: every leaf with ndim >= 2 — skips norms/biases)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state: AdamWState, params):
+        gnorm = None
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+
+        flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+        decay_flags = [
+            (decay_mask(path, leaf) if decay_mask else leaf.ndim >= 2)
+            for path, leaf in flat_p
+        ]
+        treedef = jax.tree_util.tree_structure(params)
+        decay_tree = jax.tree_util.tree_unflatten(treedef, decay_flags)
+
+        def upd(m, v, p, dec):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * jnp.where(dec, p, 0.0)
+            return -lr_t * u
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params, decay_tree)
+        metrics = {"lr": lr_t}
+        if gnorm is not None:
+            metrics["grad_norm"] = gnorm
+        return updates, AdamWState(step=step, mu=mu, nu=nu), metrics
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+__all__ = ["adamw", "AdamWState", "Optimizer", "apply_updates",
+           "clip_by_global_norm"]

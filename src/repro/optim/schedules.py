@@ -1,0 +1,41 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395).
+
+WSD is the schedule the assigned minicpm-2b architecture trains with: linear
+warmup, long stable plateau, then a short exponential/linear decay — enabling
+continuous pretraining from the stable phase.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 floor: float = 0.01):
+    """Warmup-Stable-Decay: w steps linear warmup, s steps at peak, d steps
+    exponential decay to floor*peak."""
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        in_decay = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        decayed = peak_lr * jnp.exp(jnp.log(floor) * in_decay)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, peak_lr, decayed))
+        return out
+
+    return lr
+
+
+__all__ = ["cosine_schedule", "wsd_schedule"]

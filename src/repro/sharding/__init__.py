@@ -1,0 +1,9 @@
+"""Sharding machinery: logical axis rules for activations and parameters."""
+
+from repro.sharding.api import (  # noqa: F401
+    axis_rules,
+    current_mesh,
+    guarded_sharding,
+    logical,
+    logical_spec,
+)

@@ -1,0 +1,167 @@
+"""Logical-axis sharding annotations (MaxText-style, minimal).
+
+Model code tags activation dims with *logical* names via ``logical(x,
+"batch", "seq", "embed")``; a rules table maps logical names to mesh axes.
+Outside an ``axis_rules`` context (CPU smoke tests) the tags are no-ops, so
+the same model code runs single-device and on the 512-chip dry-run mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, Union[str, tuple, None]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,            # long-context decode shards this ("model")
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_group": ("pod", "data"),
+    "capacity": None,
+    # monarch block axes (DESIGN.md Sec. 5).  Default = "auto": no explicit
+    # intermediate constraints — GSPMD propagates from the factor shardings,
+    # which measured BETTER than forcing either scheme (EXPERIMENTS.md Perf
+    # H2: psum/a2a constraints inflated memory 1.2-3.9x on the tested cells).
+    "mnr_k": None,
+    "mnr_q": None,
+    "mnr_q2": None,
+    "mnr_k2": None,
+    # mamba
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "d_inner": "model",
+}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate logical-axis sharding for model code in this thread."""
+    prev = (current_mesh(), current_rules())
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _filter_axes(mesh: Mesh, axes):
+    """Drop mesh-axis names not present in the active mesh (e.g. 'pod' on a
+    single-pod mesh); preserve tuple sub-structure."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    return kept if kept else None
+
+
+def logical_spec(names: Sequence[Optional[str]], mesh=None, rules=None) -> P:
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules() or DEFAULT_RULES
+    parts = []
+    for n in names:
+        axes = rules.get(n) if n is not None else None
+        parts.append(_filter_axes(mesh, axes) if mesh is not None else None)
+    return P(*parts)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def logical(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical dim names; no-op w/o a mesh.
+    Dims the mapped mesh axis does not divide evenly stay unsharded (e.g.
+    8 KV heads on a 16-way model axis -> replicated, GQA-correct)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    spec = logical_spec(names, mesh=mesh)
+    guarded = []
+    for dim, part in zip(x.shape, spec):
+        if part is not None and dim % _axis_size(mesh, part) != 0:
+            part = None
+        guarded.append(part)
+    if all(g is None for g in guarded):
+        # an all-None constraint is NOT neutral (it demands replication and
+        # forces all-gathers); leave placement to GSPMD propagation instead
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*guarded)))
+
+
+def set_monarch_scheme(scheme: str) -> None:
+    """Switch the Monarch TP scheme in DEFAULT_RULES (+ param rules).
+
+    "psum": stage-2 contraction sharded -> one all-reduce per pair (default).
+    "a2a":  intermediate resharded k->q (one all_to_all, ~2x less traffic
+            than the all-reduce) and R's q-blocks sharded so the output
+            lands block-aligned — the distributed analogue of the paper's
+            i_R = -i_L rotation folding (Sec. III-B2a)."""
+    from repro.sharding import params as prules
+
+    if scheme == "auto":
+        DEFAULT_RULES.update(mnr_k=None, mnr_q=None, mnr_q2=None,
+                             mnr_k2=None)
+        prules.set_monarch_scheme("psum")  # param rules: contraction-sharded
+    elif scheme == "psum":
+        DEFAULT_RULES.update(mnr_k="model", mnr_q=None, mnr_q2=None,
+                             mnr_k2="model")
+        prules.set_monarch_scheme(scheme)
+    elif scheme == "a2a":
+        DEFAULT_RULES.update(mnr_k="model", mnr_q=None, mnr_q2="model",
+                             mnr_k2=None)
+        prules.set_monarch_scheme(scheme)
+    else:
+        raise ValueError(scheme)
+
+
+def guarded_sharding(shape: tuple, names: Sequence[Optional[str]],
+                     mesh: Mesh) -> NamedSharding:
+    """NamedSharding for explicit in/out_shardings, with the same
+    divisibility guard as ``logical`` (dims the axis doesn't divide evenly
+    stay replicated — e.g. batch=1 on long_500k)."""
+    spec = logical_spec(names, mesh=mesh)
+    guarded = []
+    for dim, part in zip(shape, spec):
+        if part is not None and dim % _axis_size(mesh, part) != 0:
+            part = None
+        guarded.append(part)
+    return NamedSharding(mesh, P(*guarded))
+
+
+__all__ = ["axis_rules", "logical", "logical_spec", "guarded_sharding",
+           "current_mesh", "DEFAULT_RULES"]

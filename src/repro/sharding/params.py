@@ -1,0 +1,129 @@
+"""Path-based parameter partition rules (FSDP over "data", TP/EP over
+"model"; "pod" stays pure-DP so parameters never shard across pods).
+
+Rules are suffix patterns on the flattened parameter path; the spec covers
+the *trailing* dims of the leaf, and any extra leading dims (layer stacks,
+zamba groups, expert stacks already matched explicitly) are padded with
+``None``.  Every axis assignment is divisibility-guarded: a dim that the
+mesh axis does not divide stays unsharded (e.g. minicpm's vocab 122753 on a
+16-way axis), keeping GSPMD layouts clean instead of forcing uneven shards.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, axes):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    return kept if kept else None
+
+
+# (path substrings (all must match), trailing-dim axes)
+# monarch factor rules implement the Megatron-pair scheme (DESIGN.md Sec. 5):
+# stage-1 blocks (k) over "model" (independent block-rows, no comm), stage-2
+# contraction (k) over "model" (partial sums -> one all-reduce).
+_RULES: list[tuple[tuple[str, ...], tuple]] = [
+    (("experts", "/L"), ("model", None, None, "data")),
+    (("experts", "/R"), ("model", None, "data", None)),
+    (("experts", "w1", "w"), ("model", "data", None)),
+    (("experts", "wg", "w"), ("model", "data", None)),
+    (("experts", "w2", "w"), ("model", None, "data")),
+    (("router",), (None, None)),
+    (("embedding", "table"), ("model", "data")),
+    (("embedding", "unembed"), ("data", "model")),
+    (("/L",), ("model", None, "data")),
+    (("/R",), (None, "data", "model")),
+    (("wq", "w"), ("data", "model")),
+    (("wk", "w"), ("data", "model")),
+    (("wv", "w"), ("data", "model")),
+    (("wo", "w"), ("model", "data")),
+    (("w1", "w"), ("data", "model")),
+    (("wg", "w"), ("data", "model")),
+    (("w2", "w"), ("model", "data")),
+    (("in_proj", "w"), ("data", "model")),
+    (("out_proj", "w"), ("model", "data")),
+    (("conv_w",), (None, "model")),
+    (("conv_b",), ("model",)),
+    (("A_log",), ("model",)),
+    (("dt_bias",), ("model",)),
+    (("norm_scale",), ("model",)),
+    (("D",), ("model",)),
+]
+
+
+_MONARCH_SCHEME = "psum"
+
+
+def set_monarch_scheme(scheme: str) -> None:
+    global _MONARCH_SCHEME
+    _MONARCH_SCHEME = scheme
+
+
+def spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    rules = _RULES
+    if _MONARCH_SCHEME == "a2a":
+        # R factor sharded on its q-block dim (output block-aligned) instead
+        # of the contraction dim; experts' R likewise stays EP-sharded first.
+        rules = [(("experts", "/R"), ("model", None, "data", None)),
+                 (("/R",), ("model", None, "data"))] + [
+                    r for r in _RULES if r[0] != ("/R",)
+                    and r[0] != ("experts", "/R")]
+    for needles, axes in rules:
+        if all(n in path for n in needles):
+            trailing = list(axes)
+            if len(trailing) > len(shape):  # scalar-ish leaf, replicate
+                return P()
+            pad = [None] * (len(shape) - len(trailing))
+            full = pad + trailing
+            guarded = []
+            for dim, ax in zip(shape, full):
+                ax = _present(mesh, ax)
+                if ax is not None and dim % _axis_size(mesh, ax) != 0:
+                    ax = None
+                guarded.append(ax)
+            return P(*guarded)
+    return P()  # replicate (norms, scalars, anything unmatched)
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+    )
+
+
+def param_shardings(tree, mesh: Mesh):
+    """NamedSharding pytree matching ``tree`` (works on ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        return NamedSharding(mesh, spec_for(_path_str(path), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree
+    )
+
+
+__all__ = ["param_shardings", "spec_for", "replicated"]

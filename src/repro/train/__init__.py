@@ -1,0 +1,3 @@
+"""Training loop with checkpointing, heartbeats, straggler + elastic hooks."""
+
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

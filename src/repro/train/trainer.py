@@ -1,0 +1,126 @@
+"""Trainer: the production loop around make_train_step.
+
+Wires together every substrate: sharded state init, the (optionally
+microbatched / gradient-compressed) train step, the data pipeline,
+checkpoint save/restore-with-resume, heartbeats + straggler monitoring, and
+the elastic-remesh decision point.  On this CPU container it runs reduced
+configs end to end (examples/train_e2e.py); on a real cluster the same loop
+runs per host with the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.ft.coordinator import (HeartbeatRegistry, StragglerMonitor,
+                                  plan_elastic_remesh)
+from repro.launch.steps import make_train_step
+from repro.models.config import ModelConfig
+from repro.optim import adamw, cosine_schedule, wsd_schedule
+from repro.optim.adamw import Optimizer
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    peak_lr: float = 3e-4
+    warmup: int = 10
+    schedule: str = "cosine"          # "cosine" | "wsd" (MiniCPM)
+    accum_steps: int = 1
+    compress_grads: bool = False
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 2
+    seed: int = 0
+    # fault tolerance knobs
+    heartbeat_timeout_s: float = 300.0
+    straggler_threshold: float = 1.5
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, tcfg: TrainerConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        self.model_cfg = model_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        if tcfg.schedule == "wsd":
+            decay = max(tcfg.steps // 10, 1)
+            lr = wsd_schedule(tcfg.peak_lr, tcfg.warmup,
+                              stable=max(tcfg.steps - tcfg.warmup - decay, 1),
+                              decay=decay)
+        else:
+            lr = cosine_schedule(tcfg.peak_lr, tcfg.warmup, tcfg.steps)
+        self.optimizer: Optimizer = adamw(lr=lr)
+        self.init_state, train_step = make_train_step(
+            model_cfg, self.optimizer, accum_steps=tcfg.accum_steps,
+            compress_grads=tcfg.compress_grads)
+        self.train_step = jax.jit(train_step, donate_argnums=(0,))
+        self.heartbeats = HeartbeatRegistry(timeout_s=tcfg.heartbeat_timeout_s)
+        self.stragglers = StragglerMonitor(threshold=tcfg.straggler_threshold)
+        self.history: list[dict] = []
+
+    # -- state ---------------------------------------------------------------
+
+    def fresh_state(self):
+        return jax.jit(self.init_state)(jax.random.PRNGKey(self.tcfg.seed))
+
+    def resume_or_init(self):
+        """Restore the newest checkpoint if one exists (crash recovery)."""
+        start = 0
+        state = self.fresh_state()
+        if self.tcfg.ckpt_dir:
+            step = latest_step(self.tcfg.ckpt_dir)
+            if step is not None:
+                state, _ = restore_checkpoint(self.tcfg.ckpt_dir, step, state)
+                start = step
+        return state, start
+
+    # -- loop ----------------------------------------------------------------
+
+    def run(self, batches: Iterator[dict],
+            on_step: Optional[Callable[[int, dict], None]] = None):
+        state, start = self.resume_or_init()
+        rank = 0  # single-host container; per-host rank on a real cluster
+        for step in range(start, self.tcfg.steps):
+            batch = next(batches)
+            t0 = time.perf_counter()
+            state, metrics = self.train_step(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.heartbeats.report(rank, step)
+            self.stragglers.report(rank, dt)
+            metrics.update(step=step, step_time_s=dt)
+            self.history.append(metrics)
+            if on_step:
+                on_step(step, metrics)
+            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                      f"lr {metrics['lr']:.2e} {dt*1e3:.0f} ms", flush=True)
+            if (self.tcfg.ckpt_dir and self.tcfg.ckpt_every
+                    and (step + 1) % self.tcfg.ckpt_every == 0):
+                save_checkpoint(self.tcfg.ckpt_dir, step + 1, state,
+                                keep_last=self.tcfg.keep_last)
+            # fault-tolerance decision point (no-op while healthy)
+            bad = sorted(set(self.heartbeats.failed_ranks())
+                         | set(self.stragglers.stragglers()))
+            if bad:
+                plan = plan_elastic_remesh(
+                    data_parallel=16, model_parallel=16, bad_ranks=bad,
+                    resume_step=step)
+                print(f"[ft] unhealthy ranks {bad}: plan={plan.action}",
+                      flush=True)
+        if self.tcfg.ckpt_dir:
+            save_checkpoint(self.tcfg.ckpt_dir, self.tcfg.steps, state,
+                            keep_last=self.tcfg.keep_last)
+        return state
+
+
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs (the FULL configs
+are exercised only by the dry-run via ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.shapes import SHAPES, cell_supported, input_specs
+from repro.models import transformer as T
+
+
+@pytest.fixture(params=ALL_ARCHS)
+def arch(request):
+    return request.param
+
+
+def _smoke_batch(cfg, B=2, S=16):
+    key = jax.random.PRNGKey(0)
+    batch = {}
+    s_tok = S
+    if cfg.encdec:
+        batch["enc_embeds"] = jax.random.normal(key, (B, 4, cfg.d_model))
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jax.random.normal(key, (B, 4, cfg.d_model))
+    batch["tokens"] = jax.random.randint(key, (B, s_tok), 0, cfg.vocab)
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    return batch
+
+
+def test_full_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.param_count() > 0
+    # published sizes sanity: nemotron ~15B, internvl ~70B+, granite ~1B...
+    sizes = {
+        "nemotron-4-15b": (12e9, 18e9),
+        "minicpm-2b": (2e9, 3.5e9),
+        "gemma2-27b": (22e9, 30e9),
+        "codeqwen1_5-7b": (6e9, 8.5e9),
+        "zamba2-7b": (5.5e9, 8.5e9),
+        "qwen2-moe-a2_7b": (12e9, 16e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.6e9),
+        # backbone only: the audio frontend is a stub per the assignment
+        "seamless-m4t-large-v2": (1.2e9, 2.9e9),
+        "mamba2-2_7b": (2.2e9, 3.3e9),
+        "internvl2-76b": (62e9, 80e9),
+    }
+    lo, hi = sizes[arch]
+    dense = get_config(f"{arch}:dense")
+    n = dense.param_count()
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9},{hi/1e9}]B"
+    # monarch variant must be smaller
+    assert cfg.param_count() < n
+
+
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg)
+    # forward
+    logits, _ = T.forward(params, batch, cfg, train=False)
+    n_tok = batch["tokens"].shape[1]
+    assert logits.shape == (2, n_tok, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32)))
+    # one SGD train step
+    loss0, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, batch, cfg)[0])(params)
+    assert np.isfinite(float(loss0))
+    gnorm = sum(float(jnp.sum(jnp.square(g)))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    params2 = jax.tree_util.tree_map(lambda p, g: p - 1e-3 * g, params, grads)
+    loss1 = T.loss_fn(params2, batch, cfg)[0]
+    assert np.isfinite(float(loss1))
+
+
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = T.init_decode_cache(cfg, B, 16)
+    enc_out = (jnp.zeros((B, 4, cfg.d_model)) if cfg.encdec else None)
+    tok = jnp.zeros((B,), jnp.int32)
+    for _ in range(3):
+        logits, cache = T.decode_step(params, tok, cache, cfg, enc_out=enc_out)
+        assert logits.shape == (B, cfg.vocab)
+        assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32)))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def test_cell_matrix_covers_40_with_documented_skips():
+    live, skipped = 0, 0
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = cell_supported(cfg, shape)
+            if ok:
+                live += 1
+            else:
+                skipped += 1
+                assert "long_500k" in SHAPES and reason
+    assert live + skipped == 40
+    assert live == 32 and skipped == 8  # 8 pure-attention archs skip long_500k
+
+
+def test_input_specs_shapes(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        ok, _ = cell_supported(cfg, shape)
+        if not ok:
+            continue
+        specs = input_specs(cfg, shape)
+        cell = SHAPES[shape]
+        if cell.step == "decode":
+            assert specs["tokens"].shape == (cell.global_batch,)
+        else:
+            total = sum(
+                v.shape[1] for k, v in specs.items()
+                if k in ("tokens", "enc_embeds", "patch_embeds"))
+            assert total == cell.seq_len, (arch, shape, total)

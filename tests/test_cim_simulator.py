@@ -1,0 +1,139 @@
+"""End-to-end CIM simulator tests: the paper's claims as validation bands.
+
+Structural claims (geometry — must hold tightly):
+  Fig 6a: SparseMap ~50% fewer arrays than Linear; DenseMap >85% fewer.
+  Fig 6b: Linear util = 100%; SparseMap ~b/m; DenseMap near-full.
+  Fig 2b: ~8x params / ~5.7x FLOPs reduction on BERT-large (bands).
+Calibrated-model claims (cost composition — documented assumption set):
+  Fig 7: Linear/Sparse ~1.59x, Linear/Dense ~1.73x latency; similar energy.
+  Fig 8: DenseMap best at low ADC budget, saturates at high budget.
+  Sec IV-C: 8b->3b ADC resolution ~2.67x latency scaling.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.cim.dse import (
+    calibrated_config,
+    strategy_ratios,
+    sweep_adc_resolution,
+    sweep_adc_sharing,
+)
+from repro.cim.simulator import simulate
+from repro.cim.spec import CIMConfig
+from repro.cim.workload import PAPER_MODELS, bart_large, bert_large, gpt2_medium
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return calibrated_config()
+
+
+@pytest.fixture(scope="module", params=["bert-large", "bart-large", "gpt2-medium"])
+def model(request):
+    return PAPER_MODELS[request.param]()
+
+
+def test_fig6a_array_reduction(model, cfg):
+    lin = simulate(model, "linear", cfg)
+    sp = simulate(model, "sparse", cfg)
+    de = simulate(model, "dense", cfg)
+    sparse_red = 1 - sp.n_arrays / lin.n_arrays
+    dense_red = 1 - de.n_arrays / lin.n_arrays
+    assert 0.35 <= sparse_red <= 0.70, f"SparseMap reduction {sparse_red:.2%}"
+    assert dense_red >= 0.85, f"DenseMap reduction {dense_red:.2%}"
+    # DenseMap needs >=70% fewer arrays than SparseMap (paper: 73%)
+    assert 1 - de.n_arrays / sp.n_arrays >= 0.70
+
+
+def test_fig6b_utilization(model, cfg):
+    lin = simulate(model, "linear", cfg)
+    sp = simulate(model, "sparse", cfg)
+    de = simulate(model, "dense", cfg)
+    assert lin.utilization > 0.99
+    assert sp.utilization < 0.35  # heavy zero padding (paper: 20.4%)
+    assert de.utilization > 0.75  # near-full (paper: 78.8%)
+    assert de.utilization > 2.5 * sp.utilization  # paper: ~3x improvement
+
+
+def test_fig2b_params_flops_reduction(cfg):
+    m = bert_large()
+    dp = m.para_matmul_params() + m.embedding_params()
+    mp = m.monarch_params() + m.embedding_params()
+    assert 5.0 <= dp / mp <= 10.0, f"params reduction {dp/mp:.1f} (paper 8x)"
+    df = m.para_matmul_flops() + m.nonpara_matmul_flops() + m.head_flops()
+    mf = m.monarch_flops() + m.nonpara_matmul_flops() + m.head_flops()
+    assert 4.0 <= df / mf <= 7.0, f"FLOPs reduction {df/mf:.1f} (paper 5.7x)"
+    # parameterized matmuls dominate FLOPs (paper: >80%)
+    assert m.para_matmul_flops() / df > 0.8
+
+
+def test_fig7_latency_energy_ratios(cfg):
+    models = [f() for f in PAPER_MODELS.values()]
+    r = strategy_ratios(cfg, models)
+    # calibrated bands around the paper's 1.59 / 1.73 / 1.61 / 1.74
+    assert 1.3 <= r[("latency", "sparse")] <= 1.9
+    assert 1.4 <= r[("latency", "dense")] <= 2.1
+    assert 1.1 <= r[("energy", "sparse")] <= 2.0
+    assert 1.2 <= r[("energy", "dense")] <= 2.1
+    # orderings: both sparse strategies beat Linear; dense >= sparse
+    assert r[("latency", "dense")] > r[("latency", "sparse")] * 0.95
+    assert r[("energy", "dense")] > r[("energy", "sparse")]
+
+
+def test_fig8_adc_sharing_trends(cfg):
+    pts = sweep_adc_sharing(bert_large(), (1, 8, 32), cfg)
+    by = {(p.adcs_per_array, p.strategy): p for p in pts}
+    # DenseMap wins at the lowest ADC budget (paper: 1.6x over Linear @4)
+    assert by[(1, "dense")].latency_ns < by[(1, "linear")].latency_ns
+    assert by[(1, "dense")].latency_ns < by[(1, "sparse")].latency_ns
+    # DenseMap saturates: no improvement from 8 -> 32 ADCs
+    assert by[(32, "dense")].latency_ns >= 0.98 * by[(8, "dense")].latency_ns
+    # at high ADC counts the parallel mappings overtake DenseMap
+    assert by[(32, "sparse")].latency_ns < by[(32, "dense")].latency_ns
+    # energy: DenseMap's relative advantage grows as ADCs shrink (Fig 8b)
+    adv_low = by[(1, "linear")].energy_nj / by[(1, "dense")].energy_nj
+    adv_high = by[(32, "linear")].energy_nj / by[(32, "dense")].energy_nj
+    assert adv_low >= adv_high
+
+
+def test_adc_resolution_scaling(cfg):
+    r = sweep_adc_resolution(bert_large(), cfg)
+    # paper Sec. IV-C: 8b -> 3b cuts latency ~2.67x; energy partially (static
+    # + MVM terms don't scale with ADC bits in our model)
+    assert 2.0 <= r["latency_scaling"] <= 3.0
+    assert r["energy_scaling"] > 1.0
+
+
+def test_array_budget_swap_penalty():
+    """Sec. III-B1: with a constrained array budget, Linear pays rewrite
+    costs that the capacity-optimized DenseMap avoids."""
+    cfg = calibrated_config()
+    m = bert_large()
+    de = simulate(m, "dense", cfg)
+    budget = de.n_arrays // m.n_layers + 8  # fits dense per-layer working set
+    cfg_tight = dataclasses.replace(cfg, array_budget=budget)
+    lin_free = simulate(m, "linear", cfg)
+    lin_tight = simulate(m, "linear", cfg_tight)
+    de_tight = simulate(m, "dense", cfg_tight)
+    assert lin_tight.latency_ns_per_token > lin_free.latency_ns_per_token
+    assert de_tight.latency_ns_per_token <= de.latency_ns_per_token * 1.01
+
+
+def test_coactivation_improves_dense_latency():
+    """Beyond-paper: QKV shared-input co-activation reduces DenseMap cycles."""
+    cfg = calibrated_config()
+    m = bert_large()
+    base = simulate(m, "dense", cfg, coactivate=False)
+    co = simulate(m, "dense", cfg, coactivate=True)
+    assert co.latency_ns_per_token <= base.latency_ns_per_token
+    assert co.energy_nj_per_token <= base.energy_nj_per_token * 1.001
+
+
+def test_monarch_policy_mxu_vs_paper():
+    """mxu128 block policy must also map and simulate cleanly."""
+    cfg = calibrated_config()
+    m = bert_large()
+    r = simulate(m, "dense", cfg, monarch_policy="mxu128")
+    assert r.n_arrays > 0 and r.latency_ns_per_token > 0

@@ -1,0 +1,252 @@
+"""Model zoo tests: layer equivalences, cache consistency, SSD oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.linear import MonarchSpec
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+BASE = dict(d_model=64, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=128, dtype="float32")
+
+
+def _mk(name="m", **kw):
+    return ModelConfig(name=name, **{**BASE, **kw})
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked == sequential reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_reference(chunk):
+    key = jax.random.PRNGKey(0)
+    b, S, H, P, G, N = 2, 16, 4, 8, 2, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (b, S, G, N))
+    C_ = jax.random.normal(ks[4], (b, S, G, N))
+    y_chunk, _ = M.ssd_chunked(x, dt, A, B_, C_, chunk=chunk)
+    y_ref = M.ssd_reference(x, dt, A, B_, C_)
+    np.testing.assert_allclose(y_chunk, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_continuation():
+    """Final state from chunk pass must continue a split sequence exactly."""
+    key = jax.random.PRNGKey(1)
+    b, S, H, P, G, N = 1, 16, 2, 4, 1, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (b, S, G, N))
+    C_ = jax.random.normal(ks[4], (b, S, G, N))
+    y_full, state_full = M.ssd_chunked(x, dt, A, B_, C_, chunk=4)
+    y1, s1 = M.ssd_chunked(x[:, :8], dt[:, :8], A, B_[:, :8], C_[:, :8], chunk=4)
+    y2, s2 = M.ssd_chunked(
+        x[:, 8:], dt[:, 8:], A, B_[:, 8:], C_[:, 8:], chunk=4, init_state=s1)
+    np.testing.assert_allclose(
+        jnp.concatenate([y1, y2], axis=1), y_full, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s2, state_full, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Decode == forward (teacher forcing) consistency
+# ---------------------------------------------------------------------------
+
+
+def _decode_consistency(cfg, S=8):
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B = 2
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    logits_full, _ = T.forward(params, batch, cfg, train=False)
+    cache = T.init_decode_cache(cfg, B, S + 4)
+    outs = []
+    for t in range(S):
+        lg, cache = T.decode_step(params, tokens[:, t], cache, cfg)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_full), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_dense():
+    _decode_consistency(_mk())
+
+
+def test_decode_matches_forward_local_window():
+    _decode_consistency(_mk(attn_pattern=("local", "global"), window=4))
+
+
+def test_decode_matches_forward_mamba():
+    cfg = _mk(layer_kind="mamba",
+              ssm=SSMConfig(d_state=16, head_dim=32, chunk=8))
+    _decode_consistency(cfg)
+
+
+def test_decode_matches_forward_hybrid():
+    cfg = _mk(n_layers=5, layer_kind="hybrid", shared_attn_every=2,
+              ssm=SSMConfig(d_state=16, head_dim=32, chunk=8))
+    _decode_consistency(cfg)
+
+
+def test_decode_matches_forward_monarch():
+    _decode_consistency(_mk(monarch=MonarchSpec(enable=True, min_dim=64)))
+
+
+# ---------------------------------------------------------------------------
+# Attention behaviors
+# ---------------------------------------------------------------------------
+
+
+def test_local_window_masks_distant_tokens():
+    cfg = _mk(n_layers=1)
+    key = jax.random.PRNGKey(0)
+    p = L.attention_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, cfg.d_model))
+    out_full, _ = L.attention_apply(p, x, cfg, window=None)
+    out_win, _ = L.attention_apply(p, x, cfg, window=4)
+    # early positions (within window of start) agree; late positions differ
+    np.testing.assert_allclose(out_full[:, :4], out_win[:, :4], rtol=1e-4, atol=1e-5)
+    assert not np.allclose(out_full[:, -1], out_win[:, -1], rtol=1e-3)
+
+
+def test_causality():
+    """Future tokens must not affect past logits."""
+    cfg = _mk()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    t2 = t1.at[:, -1].set((t1[:, -1] + 1) % cfg.vocab)
+    l1, _ = T.forward(params, {"tokens": t1}, cfg, train=False)
+    l2, _ = T.forward(params, {"tokens": t2}, cfg, train=False)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-4, atol=1e-5)
+
+
+def test_gqa_head_grouping():
+    cfg = _mk(n_heads=4, n_kv_heads=1)  # MQA extreme
+    _decode_consistency(cfg, S=4)
+
+
+def test_softcap_bounds_scores():
+    x = jnp.asarray([-1e6, -10.0, 0.0, 10.0, 1e6])
+    capped = L._softcap(x, 50.0)
+    assert jnp.all(jnp.abs(capped) <= 50.0)
+
+
+# ---------------------------------------------------------------------------
+# MoE behaviors
+# ---------------------------------------------------------------------------
+
+
+def test_moe_capacity_drops_no_nan():
+    cfg = _mk(moe=MoEConfig(n_experts=4, top_k=2, n_shared=1, d_expert=32,
+                            capacity_factor=0.5))  # forced drops
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    loss, aux = T.loss_fn(params, {"tokens": tokens, "labels": tokens}, cfg)
+    assert jnp.isfinite(loss)
+    assert jnp.isfinite(aux["lb_loss"]) and aux["lb_loss"] >= 0
+
+
+def test_moe_grad_flows_to_experts_and_router():
+    cfg = _mk(moe=MoEConfig(n_experts=4, top_k=2, d_expert=32))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    grads = jax.grad(lambda p: T.loss_fn(p, {"tokens": tokens, "labels": tokens},
+                                         cfg)[0])(params)
+    router_g = grads["decoder"]["layers"]["moe"]["router"]["w"]
+    expert_g = grads["decoder"]["layers"]["moe"]["experts"]["w1"]["w"]
+    assert float(jnp.max(jnp.abs(router_g))) > 0
+    assert float(jnp.max(jnp.abs(expert_g))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Monarch integration
+# ---------------------------------------------------------------------------
+
+
+def test_monarch_swaps_parameterized_matmuls_only():
+    cfg = _mk(monarch=MonarchSpec(enable=True, min_dim=64))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    attn = params["decoder"]["layers"]["attn"]
+    assert "L" in attn["wq"] and "R" in attn["wq"]
+    # router/norms/embeddings stay dense
+    assert "table" in params["embedding"]
+
+
+def test_monarch_param_reduction():
+    dense = _mk(d_model=256, d_ff=512, vocab=64)
+    mon = _mk(d_model=256, d_ff=512, vocab=64,
+              monarch=MonarchSpec(enable=True, min_dim=128))
+    pd = T.init_params(jax.random.PRNGKey(0), dense)
+    pm = T.init_params(jax.random.PRNGKey(0), mon)
+    size = lambda p: sum(x.size for x in jax.tree_util.tree_leaves(p))
+    assert size(pm) < size(pd)
+
+
+def test_chunked_attention_matches_full():
+    """Perf-loop knob (EXPERIMENTS.md Perf H1): KV-chunked flash-style
+    attention must be numerically exact vs the full-materialization path,
+    for causal, windowed (traced), and softcapped variants."""
+    cfg = _mk(n_layers=1)
+    p = L.attention_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    cfg_c = dataclasses.replace(cfg, attn_chunk=8)
+    for window in (None, 8):
+        a, _ = L.attention_apply(p, x, cfg, window=window)
+        b, _ = L.attention_apply(p, x, cfg_c, window=window)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+    cfg_s = dataclasses.replace(cfg, logit_softcap=30.0)
+    cfg_sc = dataclasses.replace(cfg_s, attn_chunk=8)
+    a, _ = L.attention_apply(p, x, cfg_s, window=None)
+    b, _ = L.attention_apply(p, x, cfg_sc, window=None)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_decode_consistency():
+    cfg = _mk(attn_pattern=("local", "global"), window=4)
+    cfg = dataclasses.replace(cfg, attn_chunk=4)
+    _decode_consistency(cfg)
+
+
+def test_fast_decode_scores_close():
+    """Perf-loop knob: bf16 scores + additive mask stays within bf16
+    tolerance of the f32 path."""
+    cfg = _mk(n_layers=1)
+    p = L.attention_init(jax.random.PRNGKey(0), cfg)
+    cache = L.attention_cache_init(cfg, 2, 16, jnp.float32)
+    for t in range(3):
+        _, cache = L.attention_apply(
+            p, jax.random.normal(jax.random.PRNGKey(t), (2, 1, cfg.d_model)),
+            cfg, cache=cache, pos=jnp.asarray([t, t]))
+    xq = jax.random.normal(jax.random.PRNGKey(9), (2, 1, cfg.d_model))
+    pos = jnp.asarray([3, 3])
+    o1, _ = L.attention_apply(p, xq, cfg, cache=cache, pos=pos)
+    cfg_f = dataclasses.replace(cfg, fast_decode_scores=True)
+    o2, _ = L.attention_apply(p, xq, cfg_f, cache=cache, pos=pos)
+    np.testing.assert_allclose(o1, o2, rtol=3e-2, atol=3e-2)
+
+
+def test_param_count_formula_matches_init():
+    for cfg in (
+        _mk(),
+        _mk(moe=MoEConfig(n_experts=4, top_k=2, n_shared=1, d_expert=32)),
+        _mk(layer_kind="mamba", ssm=SSMConfig(d_state=16, head_dim=32, chunk=8)),
+    ):
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        predicted = cfg.param_count()
+        # formula covers the dominant terms; allow small bias/norm slack
+        assert abs(actual - predicted) / actual < 0.15, (cfg.name, actual, predicted)

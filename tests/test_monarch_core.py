@@ -1,0 +1,211 @@
+"""Unit + property tests for the Monarch core (multiply, D2S, permutations)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import monarch as mn
+from repro.core import d2s
+from repro.core import permutations as perms
+from repro.core.linear import MonarchSpec, linear_apply, linear_init
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# monarch_multiply vs dense materialization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "din,dout,k,q",
+    [
+        (64, 64, 8, 8),       # square, b = sqrt(n)
+        (64, 256, 8, 8),      # rectangular (FFN up)
+        (256, 64, 16, 8),     # rectangular (FFN down), k != q
+        (96, 120, 6, 10),     # non-power-of-two
+    ],
+)
+def test_multiply_matches_dense(din, dout, k, q):
+    dims = mn.MonarchDims(din=din, dout=dout, k=k, q=q)
+    key = jax.random.PRNGKey(0)
+    params = mn.init_monarch(key, dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, din))
+    y = mn.monarch_multiply(x, params["L"], params["R"])
+    w = mn.monarch_to_dense(params["L"], params["R"])
+    np.testing.assert_allclose(y, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_multiply_batch_dims():
+    dims = mn.MonarchDims(din=64, dout=64, k=8, q=8)
+    params = mn.init_monarch(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 64))
+    y = mn.monarch_multiply(x, params["L"], params["R"])
+    assert y.shape == (2, 5, 64)
+    y_flat = mn.monarch_multiply(x.reshape(10, 64), params["L"], params["R"])
+    np.testing.assert_allclose(y.reshape(10, 64), y_flat, rtol=1e-6)
+
+
+def test_paper_form_equivalence_square():
+    """Folded convention == paper's explicit P.L.P.R.P (square case)."""
+    dims = mn.MonarchDims(din=36, dout=36, k=6, q=6)
+    params = mn.init_monarch(jax.random.PRNGKey(2), dims)
+    w_folded = np.asarray(mn.monarch_to_dense(params["L"], params["R"]))
+    w_paper = perms.paper_form_dense(np.asarray(params["L"]), np.asarray(params["R"]))
+    np.testing.assert_allclose(w_folded, w_paper, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Permutation utilities
+# ---------------------------------------------------------------------------
+
+
+@given(
+    k=st.integers(min_value=1, max_value=8),
+    q=st.integers(min_value=1, max_value=8),
+)
+@settings(deadline=None, max_examples=25)
+def test_stride_perm_roundtrip(k, q):
+    x = np.arange(k * q, dtype=np.float32)[None]
+    y = perms.apply_stride_perm(jnp.asarray(x), k, q)
+    z = perms.apply_stride_perm(y, q, k)
+    np.testing.assert_array_equal(np.asarray(z), x)
+    # matrix form agrees with reshape form
+    y_mat = x @ perms.stride_perm_matrix(k, q)
+    np.testing.assert_array_equal(np.asarray(y), y_mat)
+
+
+def test_rotate_blocks_inverse():
+    x = jnp.arange(24.0)[None]
+    for i in range(4):
+        y = perms.rotate_blocks(x, i, 4)
+        z = perms.rotate_blocks(y, -i, 4)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# D2S projection (paper Sec. III-A)
+# ---------------------------------------------------------------------------
+
+
+def test_d2s_exact_recovery_of_monarch_matrix():
+    """Projection must be exact when W already is Monarch (rank-1 slices)."""
+    dims = mn.MonarchDims(din=64, dout=64, k=8, q=8)
+    params = mn.init_monarch(jax.random.PRNGKey(3), dims)
+    w = mn.monarch_to_dense(params["L"], params["R"])
+    L, R = d2s.project_to_monarch(w, dims)
+    err = d2s.projection_error(w, L, R)
+    assert float(err) < 1e-5, f"exact recovery failed: rel err {float(err)}"
+
+
+def test_d2s_is_optimal_vs_perturbations():
+    """Frobenius optimality: projection error <= error of perturbed factors."""
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (64, 64))
+    dims = mn.MonarchDims(din=64, dout=64, k=8, q=8)
+    L, R = d2s.project_to_monarch(w, dims)
+    base = float(d2s.projection_error(w, L, R))
+    for seed in range(3):
+        dL = 0.01 * jax.random.normal(jax.random.PRNGKey(10 + seed), L.shape)
+        perturbed = float(d2s.projection_error(w, L + dL, R))
+        assert base <= perturbed + 1e-7
+
+
+@given(bits=st.integers(min_value=2, max_value=4))
+@settings(deadline=None, max_examples=6)
+def test_d2s_error_bounded_for_random(bits):
+    """Relative error of projecting an iid Gaussian stays < 1 and the
+    reconstruction keeps the dominant energy per slice."""
+    n = 4 ** bits if 4 ** bits >= 16 else 16
+    k = int(np.sqrt(n))
+    w = jax.random.normal(jax.random.PRNGKey(bits), (n, n))
+    dims = mn.MonarchDims(din=n, dout=n, k=k, q=k)
+    L, R = d2s.project_to_monarch(w, dims)
+    err = float(d2s.projection_error(w, L, R))
+    assert 0.0 < err < 1.0
+
+
+def test_convert_tree_selects_and_reports():
+    key = jax.random.PRNGKey(0)
+    params = {
+        "attn": {"wq": jax.random.normal(key, (64, 64))},
+        "ln": {"scale": jnp.ones((64,))},
+        "ffn": {"w1": jax.random.normal(key, (64, 256))},
+    }
+    new, reports = d2s.convert_tree(
+        params, select=lambda path, leaf: "wq" in path or "w1" in path
+    )
+    assert set(r.name.split("'")[1] if "'" in r.name else r.name for r in reports)
+    assert "L" in new["attn"]["wq"] and "R" in new["ffn"]["w1"]
+    # non-selected leaves untouched
+    np.testing.assert_array_equal(np.asarray(new["ln"]["scale"]), np.ones((64,)))
+    assert len(reports) == 2
+    for r in reports:
+        assert r.compression > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Dims policies
+# ---------------------------------------------------------------------------
+
+
+def test_paper_dims_square():
+    dims = mn.paper_dims(1024, 1024)
+    assert dims.k == 32 and dims.q == 32 and dims.p == 32 and dims.s == 32
+    # paper: sqrt(n)/2 compression = 16x for n=1024
+    assert abs(dims.compression - 16.0) < 1e-9
+
+
+def test_mxu_dims_alignment():
+    dims = mn.mxu_dims(6144, 24576)
+    assert dims.p % 128 == 0 and dims.s % 128 == 0
+
+
+@given(
+    din=st.sampled_from([256, 512, 1024, 2304, 3584, 4096, 6144]),
+    dout=st.sampled_from([256, 512, 1024, 4096, 24576]),
+)
+@settings(deadline=None, max_examples=20)
+def test_make_dims_valid(din, dout):
+    for policy in ("paper", "mxu128"):
+        dims = mn.make_dims(din, dout, policy=policy)
+        assert dims.k * dims.p == din
+        assert dims.q * dims.s == dout
+        assert dims.params < dims.dense_params
+
+
+# ---------------------------------------------------------------------------
+# Unified linear layer
+# ---------------------------------------------------------------------------
+
+
+def test_linear_dense_vs_monarch_dispatch():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 512))
+    pd = linear_init(key, 512, 512, spec=None)
+    ym = linear_apply(pd, x)
+    assert ym.shape == (4, 512)
+    spec = MonarchSpec(enable=True)
+    pm = linear_init(key, 512, 512, spec=spec)
+    assert "L" in pm and "R" in pm
+    y2 = linear_apply(pm, x)
+    assert y2.shape == (4, 512)
+    assert not np.any(np.isnan(np.asarray(y2)))
+
+
+def test_linear_min_dim_guard():
+    spec = MonarchSpec(enable=True, min_dim=256)
+    p = linear_init(jax.random.PRNGKey(0), 64, 512, spec=spec)
+    assert "w" in p  # too small: stays dense (routers etc.)
+
+
+def test_monarch_init_variance_matches_dense():
+    """Composed Monarch map should have ~1/din output variance like dense."""
+    dims = mn.MonarchDims(din=1024, dout=1024, k=32, q=32)
+    params = mn.init_monarch(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, 1024))
+    y = mn.monarch_multiply(x, params["L"], params["R"])
+    var = float(jnp.var(y))
+    assert 0.5 < var < 2.0, f"output variance {var} far from 1"
