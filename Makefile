@@ -1,0 +1,27 @@
+# Developer entry points. `make test` is the tier-1 gate CI runs.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast bench-serving quickstart serve deps deps-dev
+
+deps:
+	$(PYTHON) -m pip install -r requirements.txt
+
+deps-dev:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-fast:
+	$(PYTHON) -m pytest -x -q tests/test_serving.py tests/test_models.py
+
+bench-serving:
+	$(PYTHON) benchmarks/serve_throughput.py
+
+quickstart:
+	$(PYTHON) examples/quickstart.py
+
+serve:
+	$(PYTHON) examples/serve_decode.py --arch bert-large-lm --requests 4

@@ -1,0 +1,110 @@
+"""Serving throughput: continuous batching vs the seed single-request path.
+
+Measures decode tokens/s at increasing concurrency.  The baseline processes
+the same request set the way the seed engine did — one request at a time
+through a B=1 ``ServeEngine`` (Python prefill loop + per-token steps) — and
+the continuous engine serves them through the paged-KV slot batch.  Greedy
+sampling, no EOS, so both paths emit exactly ``new_tokens`` per request and
+outputs must be token-identical (asserted).
+
+Emits BENCH_serving.json:
+  {"results": [{"concurrency": N, "baseline_tok_s": ..., "continuous_tok_s":
+   ..., "speedup": ...}, ...], "outputs_match": true}
+
+Run:  PYTHONPATH=src python benchmarks/serve_throughput.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
+                           ServeEngine)
+
+CFG = ModelConfig(name="bench", d_model=128, n_layers=2, n_heads=4,
+                  n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
+
+
+def _baseline(params, prompts, gen, max_len):
+    """Seed serving path: each request runs alone through a B=1 engine."""
+    outs = []
+    eng = ServeEngine(CFG, params, max_len=max_len)
+    eng._prefill = None  # seed behavior: token-by-token Python prefill loop
+    for p in prompts:
+        outs.append(np.asarray(eng.generate(p[None], gen))[0])
+    return np.stack(outs)
+
+
+def _continuous(params, prompts, gen, max_len, max_slots):
+    eng = ContinuousBatchingEngine(
+        CFG, params, max_slots=max_slots, page_size=8, max_len=max_len)
+    out = np.asarray(eng.generate(np.stack(prompts), gen))
+    eng.pool_host.check_invariants()
+    return out
+
+
+def run(concurrencies=(1, 2, 4, 8), prompt_len=16, new_tokens=32):
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    gen = GenerationConfig(max_new_tokens=new_tokens)
+    max_len = prompt_len + new_tokens + 8
+    results = []
+    all_match = True
+    for n in concurrencies:
+        prompts = [np.asarray(jax.random.randint(
+            jax.random.PRNGKey(100 + i), (prompt_len,), 0, CFG.vocab))
+            for i in range(n)]
+        # warm both paths (jit compile) on a single token budget
+        warm = GenerationConfig(max_new_tokens=2)
+        _baseline(params, prompts[:1], warm, max_len)
+        _continuous(params, prompts, warm, max_len, n)
+
+        t0 = time.perf_counter()
+        base_out = _baseline(params, prompts, gen, max_len)
+        t_base = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        cont_out = _continuous(params, prompts, gen, max_len, n)
+        t_cont = time.perf_counter() - t0
+
+        match = bool(np.array_equal(base_out, cont_out))
+        all_match &= match
+        toks = n * new_tokens
+        results.append({
+            "concurrency": n,
+            "baseline_tok_s": toks / t_base,
+            "continuous_tok_s": toks / t_cont,
+            "speedup": t_base / t_cont,
+            "outputs_match": match,
+        })
+        print(f"concurrency={n}: baseline={toks / t_base:7.1f} tok/s  "
+              f"continuous={toks / t_cont:7.1f} tok/s  "
+              f"speedup={t_base / t_cont:5.2f}x  match={match}")
+    return results, all_match
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+    results, all_match = run(new_tokens=args.new_tokens)
+    payload = {"bench": "serving_throughput", "results": results,
+               "outputs_match": all_match}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+    assert all_match, "continuous outputs diverged from the baseline"
+    at8 = [r for r in results if r["concurrency"] == 8]
+    if at8:
+        print(f"speedup at 8 concurrent: {at8[0]['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

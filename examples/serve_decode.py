@@ -1,41 +1,104 @@
-"""Serving example: batched generation with the Monarch model.
+"""Serving example: continuous batching with the paged KV cache.
+
+Submits a ragged burst of requests (mixed prompt lengths, per-request
+sampling params), streams tokens as they are produced, and reports
+scheduler/pool statistics — including the CIM cost model's simulated
+latency/energy when ``--cost-model cim`` is selected.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--arch mamba2-2_7b]
-(reduced configs on CPU; full configs are exercised by the dry-run)
+      (SSM/hybrid archs fall back to the legacy single-batch engine)
 """
 
 import argparse
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import GenerationConfig, ServeEngine
+from repro.serving import (CIMCostModel, ContinuousBatchingEngine,
+                           GenerationConfig, HBMCostModel, SamplingParams,
+                           SchedulerConfig, ServeEngine)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="codeqwen1_5-7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--cost-model", choices=["none", "hbm", "cim"],
+                    default="cim")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="decode attention via the Pallas paged kernel")
+    ap.add_argument("--engine", choices=["continuous", "legacy"],
+                    default="continuous")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     print(f"arch={args.arch} (reduced: d={cfg.d_model}, L={cfg.n_layers}, "
           f"kind={cfg.layer_kind}, monarch={cfg.monarch.enable})")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.new_tokens + 4)
 
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
-    out = engine.generate(prompts, GenerationConfig(
-        max_new_tokens=args.new_tokens, temperature=args.temperature))
-    for b in range(args.batch):
-        print(f"req{b}: prompt={prompts[b].tolist()[:8]}... "
-              f"-> {out[b].tolist()}")
+    if args.engine == "legacy" or cfg.layer_kind != "attn":
+        if cfg.layer_kind != "attn" and args.engine == "continuous":
+            print(f"({cfg.layer_kind} stack: falling back to ServeEngine)")
+        engine = ServeEngine(cfg, params, max_len=64)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.requests, 12), 0, cfg.vocab)
+        out = engine.generate(prompts, GenerationConfig(
+            max_new_tokens=args.new_tokens, temperature=args.temperature))
+        for b in range(out.shape[0]):
+            print(f"req{b}: -> {out[b].tolist()}")
+        print("serve OK")
+        return
+
+    cost = None
+    if args.cost_model == "cim":
+        cost = CIMCostModel(cfg, strategy="sparse", seq_len=128)
+        print(f"CIM cost model: {cost.per_token_ns:.0f} ns/token, "
+              f"{cost.per_token_nj:.0f} nJ/token (sparse mapping)")
+    elif args.cost_model == "hbm":
+        cost = HBMCostModel.from_model_config(cfg)
+
+    engine = ContinuousBatchingEngine(
+        cfg, params, max_slots=args.max_slots, page_size=args.page_size,
+        max_len=64, cost_model=cost,
+        scheduler_cfg=SchedulerConfig(max_prefill_tokens=64),
+        use_paged_kernel=args.paged_kernel)
+
+    rng = np.random.default_rng(1)
+    finished = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 20))
+        prompt = rng.integers(0, cfg.vocab, size=plen)
+        engine.add_request(
+            prompt,
+            SamplingParams(max_new_tokens=args.new_tokens,
+                           temperature=args.temperature, seed=i),
+            on_token=lambda r, t: print(
+                f"  step {engine.step_idx:3d} req{r.req_id} += {t}"),
+        )
+        # stagger arrivals: run a scheduler iteration per submit (short
+        # requests can finish during the submission phase — keep them)
+        finished.extend(engine.step())
+
+    finished.extend(engine.run())
+    print(f"\nfinished {len(finished)} requests")
+    for r in sorted(finished, key=lambda r: r.req_id):
+        print(f"req{r.req_id}: prompt_len={r.prompt_len} "
+              f"admitted@{r.admitted_step} done@{r.finished_step} "
+              f"({r.finish_reason.value}) -> {r.output_tokens}")
+    s = engine.stats
+    print(f"\nsteps={engine.step_idx} decode_steps={s['decode_steps']} "
+          f"tokens_out={s['tokens_out']} prefill_tokens={s['prefill_tokens']}")
+    if cost is not None and s["sim_latency_ns"]:
+        print(f"simulated decode cost ({args.cost_model} model): "
+              f"{s['sim_latency_ns']/1e3:.1f} us, "
+              f"{s['sim_energy_nj']/1e3:.1f} uJ")
+    engine.pool_host.check_invariants()
     print("serve OK")
 
 

@@ -154,6 +154,45 @@ def bart_large() -> ModelDesc:
     )
 
 
+def decode_workload(cfg, seq_len: int = 512) -> ModelDesc:
+    """ModelDesc for one decode step of a ``repro.models.config.ModelConfig``
+    attention stack — the workload the serving scheduler's CIM cost model
+    pushes through ``simulate`` to price a batch's per-token latency/energy.
+
+    Covers GQA projections and (gated) FFN matmuls; MoE / SSM stacks fall
+    back to their dense-FFN equivalent for costing purposes.
+    """
+    d, hd = cfg.d_model, cfg.hd
+    h, kv, ff = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    gated = cfg.ffn_type in ("swiglu", "geglu")
+    mm = [
+        MatmulDesc("wq", d, h * hd, "x_attn"),
+        MatmulDesc("wk", d, kv * hd, "x_attn"),
+        MatmulDesc("wv", d, kv * hd, "x_attn"),
+        MatmulDesc("wo", h * hd, d, "attn_out"),
+        MatmulDesc("ffn1", d, ff, "x_ffn"),
+        MatmulDesc("ffn2", ff, d, "ffn_mid"),
+    ]
+    stages = [("wq", "wk", "wv"), ("wo",), ("ffn1",), ("ffn2",)]
+    if gated:
+        mm.append(MatmulDesc("ffng", d, ff, "x_ffn"))
+        stages = [("wq", "wk", "wv"), ("wo",), ("ffn1", "ffng"), ("ffn2",)]
+    layer = LayerDesc(
+        matmuls=tuple(mm),
+        stages=tuple(stages),
+        fixed_ops=(("layernorm", 2), ("add", 2), ("gelu", 1), ("comm", 2)),
+        count=cfg.n_layers,
+    )
+    return ModelDesc(
+        name=f"{cfg.name}-decode",
+        d_model=d,
+        seq_len=seq_len,
+        n_heads=h,
+        vocab=cfg.vocab,
+        layers=(layer,),
+    )
+
+
 PAPER_MODELS = {"bert-large": bert_large, "bart-large": bart_large,
                 "gpt2-medium": gpt2_medium}
 
@@ -165,5 +204,6 @@ __all__ = [
     "bert_large",
     "bart_large",
     "gpt2_medium",
+    "decode_workload",
     "PAPER_MODELS",
 ]

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: paged-KV decode attention (one query per sequence).
+
+The continuous-batching engine stores KV in fixed-size pages owned by a
+shared pool; a sequence's pages are scattered, so dense attention would
+first have to gather them into a contiguous (B, T, KV, hd) buffer in HBM.
+This kernel fuses the gather away: the grid walks (sequence, logical page)
+and the k/v BlockSpec index maps read the *physical* page id from the
+scalar-prefetched page table, so each step DMAs exactly one page into VMEM
+and folds it into a flash-style running softmax.  No (B, T) KV
+materialization, no host round-trips.
+
+Grid: (B, MP).  Scalar prefetch: page_table (B, MP), lengths (B,),
+window (1,).  Scratch: per-head running max / normalizer / accumulator,
+persistent across the MP inner steps of one sequence.
+
+On CPU (this container) the kernel executes with ``interpret=True``; on TPU
+the same BlockSpecs compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_attn_kernel(pt_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, page_size: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[:] = jnp.full_like(m_ref, -1e30)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)       # (H, hd)
+    k = k_ref[0].astype(jnp.float32)       # (pg, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    H, hd = q.shape
+    pg, KV, _ = k.shape
+    g = H // KV
+
+    qh = q.reshape(KV, g, hd)
+    s = jnp.einsum("kgh,tkh->kgt", qh, k) / math.sqrt(hd)  # (KV,g,pg)
+    t = i * page_size + jnp.arange(pg)
+    q_pos = len_ref[b] - 1
+    ok = (t <= q_pos) & ((q_pos - t) < win_ref[0])
+    s = jnp.where(ok[None, None, :], s, -1e30).reshape(H, pg)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # explicit ok-multiply: a fully-masked page would otherwise contribute
+    # exp(-1e30 - (-1e30)) = 1 per key to the normalizer
+    p = jnp.exp(s - m_new[:, None]) * ok[None, :].astype(jnp.float32)
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = l_prev * scale + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("kgt,tkh->kgh", p.reshape(KV, g, pg), v).reshape(H, hd)
+    acc_ref[:] = acc_ref[:] * scale[:, None] + pv
+    m_ref[:, 0] = m_new
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _emit():
+        out = acc_ref[:] / jnp.maximum(l_ref[:], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_attention(q, k_pages, v_pages, page_table, lengths, window,
+                     *, interpret: bool):
+    B, H, hd = q.shape
+    _, pg, KV, _ = k_pages.shape
+    MP = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, MP),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, i, pt, ln, wn: (b, 0, 0)),
+            pl.BlockSpec((1, pg, KV, hd),
+                         lambda b, i, pt, ln, wn: (pt[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, pg, KV, hd),
+                         lambda b, i, pt, ln, wn: (pt[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, i, pt, ln, wn: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, page_size=pg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      window.reshape(1).astype(jnp.int32), q, k_pages, v_pages)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array,
+                    window: jax.Array) -> jax.Array:
+    """q: (B, H, hd) single-position queries; k/v_pages: (P, page, KV, hd);
+    page_table: (B, MP); lengths: (B,) valid keys per row (current token
+    included); window: int32 scalar sliding window (huge value = global).
+    Returns (B, H, hd)."""
+    interp = jax.default_backend() != "tpu"  # Mosaic-only lowering
+    return _paged_attention(q, k_pages, v_pages, page_table, lengths,
+                            jnp.asarray(window), interpret=interp)
+
+
+__all__ = ["paged_attention"]

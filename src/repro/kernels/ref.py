@@ -23,4 +23,30 @@ def monarch_ref(x: jax.Array, L: jax.Array, R: jax.Array) -> jax.Array:
     return y.reshape(T, q * s)
 
 
-__all__ = ["bdmm_ref", "monarch_ref"]
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array,
+                        window) -> jax.Array:
+    """Oracle for the paged decode-attention kernel: gather every sequence's
+    pages into a contiguous KV buffer, then plain masked softmax attention.
+
+    q: (B, H, hd), k/v_pages: (P, page, KV, hd), page_table: (B, MP),
+    lengths: (B,) valid keys per row, window: sliding window (scalar).
+    """
+    B, H, hd = q.shape
+    _, pg, KV, _ = k_pages.shape
+    MP = page_table.shape[1]
+    g = H // KV
+    kk = k_pages[page_table].reshape(B, MP * pg, KV, hd).astype(jnp.float32)
+    vv = v_pages[page_table].reshape(B, MP * pg, KV, hd).astype(jnp.float32)
+    qh = q.reshape(B, KV, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qh, kk) / jnp.sqrt(jnp.float32(hd))
+    t = jnp.arange(MP * pg)[None, :]
+    q_pos = (lengths - 1)[:, None]
+    ok = (t <= q_pos) & ((q_pos - t) < window)
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, vv)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+__all__ = ["bdmm_ref", "monarch_ref", "paged_attention_ref"]

@@ -72,6 +72,8 @@ class ModelConfig:
     attn_chunk: Optional[int] = None  # KV-chunked (flash-style) attention:
                                       # bounds score materialization to S x C
     fast_decode_scores: bool = False  # bf16 scores + additive mask in decode
+    paged_kernel: bool = False        # paged decode attention via the Pallas
+                                      # gather kernel (kernels/paged.py)
 
     # FFN / block details
     ffn_type: str = "swiglu"                     # swiglu|gelu|geglu|relu2

@@ -167,6 +167,7 @@ def attention_apply(
     window=None,
     cache: Optional[dict] = None,
     pos: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,
     kv_input: Optional[jax.Array] = None,
     bidir: bool = False,
     backend: str = "einsum",
@@ -176,7 +177,11 @@ def attention_apply(
     ``window``: None for full attention, or an int / traced scalar for a
     sliding window (traced per-layer values let local/global alternation
     share one scanned stack).
-    ``cache`` (decode): {"k": (B,T,KV,hd), "v": ...} updated at ``pos``.
+    ``cache``: either the contiguous ring cache {"k": (B,T,KV,hd), "v": ...}
+    or a paged cache {"k_pages": (P,page,KV,hd), "v_pages": ...} addressed
+    through ``page_table`` (B, max_pages).  Both accept S >= 1 new tokens per
+    row (S > 1 is the batched-prefill path), written at positions
+    ``pos[b] + arange(S)``.
     Returns (out, updated_cache).
     """
     B, S, d = x.shape
@@ -192,8 +197,8 @@ def attention_apply(
     if pos is None:
         q_pos = jnp.arange(S)
         k_pos = jnp.arange(Skv)
-    else:  # decode: one position per batch row
-        q_pos = jnp.broadcast_to(pos.reshape(B, 1), (B, S))
+    else:  # cached: per-row start position, S consecutive new tokens
+        q_pos = pos.reshape(B, 1) + jnp.arange(S)[None, :]
         k_pos = q_pos
     if not bidir and kv_input is None:
         q = rope(q, q_pos, cfg.rope_theta)
@@ -207,20 +212,23 @@ def attention_apply(
     v = logical(v, "batch", "seq" if cache is None else "kv_seq", "kv_heads", "head_dim")
 
     new_cache = None
-    if cache is not None:
-        # decode: write k/v at pos into the ring cache, attend over cache
+    if cache is not None and "k_pages" in cache:
+        out, new_cache = _paged_attend(
+            q, k, v, cache, page_table, q_pos, cfg, window, dtype)
+    elif cache is not None:
+        # write the S new k/v rows at pos..pos+S-1 into the ring cache,
+        # attend each query over the cache under its own causal horizon
         ck, cv = cache["k"], cache["v"]
         T = ck.shape[1]
-        posb = pos.reshape(B)  # one position per batch row
-        idx = posb[:, None, None, None]
-        upd = jnp.arange(T)[None, :, None, None] == idx
-        ck = jnp.where(upd, k, ck)
-        cv = jnp.where(upd, v, cv)
+        rows = jnp.arange(B)[:, None]
+        ck = ck.at[rows, q_pos].set(k)
+        cv = cv.at[rows, q_pos].set(v)
         new_cache = {"k": ck, "v": cv}
-        valid = jnp.arange(T)[None, :] <= posb[:, None]  # (B,T)
+        kj = jnp.arange(T)[None, None, :]
+        valid = kj <= q_pos[..., None]  # (B,S,T)
         if window is not None:
-            valid &= (posb[:, None] - jnp.arange(T)[None, :]) < window
-        mask = valid[:, None, None, None, :]  # (B,1,1,S=1,T)
+            valid &= (q_pos[..., None] - kj) < window
+        mask = valid[:, None, None]  # (B,1,1,S,T)
         out = _sdpa(q, ck, cv, mask, cfg.logit_softcap, dtype,
                     fast_scores=cfg.fast_decode_scores)
     elif (cfg.attn_chunk is not None and kv_input is None
@@ -248,6 +256,63 @@ def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> d
         "k": jnp.zeros((batch, max_len, kv, hd), dtype=dtype),
         "v": jnp.zeros((batch, max_len, kv, hd), dtype=dtype),
     }
+
+
+def paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int, dtype) -> dict:
+    """One layer's share of the paged KV pool: ``n_pages`` fixed-size pages.
+
+    Unlike the ring cache there is no batch dimension — sequences own
+    disjoint page sets through their page tables, so one physical pool
+    serves every slot of the continuous-batching engine.
+    """
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype=dtype),
+        "v_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype=dtype),
+    }
+
+
+def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
+                  window, dtype):
+    """Write S new k/v rows through the page table, attend over the gathered
+    pages.
+
+    q: (B,S,H,hd); k/v: (B,S,KV,hd); cache pages: (P, page, KV, hd);
+    page_table: (B, MP) physical page ids; q_pos: (B,S) global positions.
+    Logical page ``g // page`` of global position ``g`` maps to physical page
+    ``page_table[b, g // page]``.  Unallocated table entries point at the
+    reserved sink page 0; they are never attended because the causal mask
+    only admits keys at positions <= q_pos.
+    """
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    pg = kp.shape[1]
+    B, S = q_pos.shape
+    phys = jnp.take_along_axis(page_table, q_pos // pg, axis=1)  # (B,S)
+    off = q_pos % pg
+    kp = kp.at[phys, off].set(k)
+    vp = vp.at[phys, off].set(v)
+    new_cache = {"k_pages": kp, "v_pages": vp}
+
+    if cfg.paged_kernel and S == 1 and cfg.logit_softcap is None:
+        from repro.kernels.paged import paged_attention  # lazy: optional path
+
+        win = jnp.asarray(
+            1_000_000_000 if window is None else window, jnp.int32)
+        out = paged_attention(q[:, 0], kp, vp, page_table,
+                              q_pos[:, 0] + 1, win)
+        return out[:, None], new_cache
+
+    MP = page_table.shape[1]
+    kk = kp[page_table].reshape(B, MP * pg, *kp.shape[2:])  # (B,T,KV,hd)
+    vv = vp[page_table].reshape(B, MP * pg, *vp.shape[2:])
+    kj = jnp.arange(MP * pg)[None, None, :]
+    valid = kj <= q_pos[..., None]  # (B,S,T)
+    if window is not None:
+        valid &= (q_pos[..., None] - kj) < window
+    mask = valid[:, None, None]  # (B,1,1,S,T)
+    out = _sdpa(q, kk, vv, mask, cfg.logit_softcap, dtype,
+                fast_scores=cfg.fast_decode_scores)
+    return out, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -425,7 +490,8 @@ def cross_entropy(logits: jax.Array, labels: jax.Array,
 
 __all__ = [
     "norm_init", "norm_apply", "rope",
-    "attention_init", "attention_apply", "attention_cache_init", "causal_mask",
+    "attention_init", "attention_apply", "attention_cache_init",
+    "paged_cache_init", "causal_mask",
     "ffn_init", "ffn_apply", "moe_init", "moe_apply",
     "embedding_init", "embed", "unembed", "cross_entropy",
 ]

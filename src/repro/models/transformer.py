@@ -68,6 +68,7 @@ def attn_block_apply(
     window=None,
     cache: Optional[dict] = None,
     pos=None,
+    page_table=None,
     enc_out=None,
     bidir: bool = False,
 ) -> tuple[jax.Array, Optional[dict], jax.Array]:
@@ -75,7 +76,7 @@ def attn_block_apply(
     h = L.norm_apply(p["ln1"], x, cfg.norm_type)
     a, new_attn_cache = L.attention_apply(
         p["attn"], h, cfg, window=window, cache=cache["attn"] if cache else None,
-        pos=pos, bidir=bidir, backend=cfg.monarch.backend,
+        pos=pos, page_table=page_table, bidir=bidir, backend=cfg.monarch.backend,
     )
     if cfg.sandwich_norm:
         a = L.norm_apply(p["ln1_post"], a, cfg.norm_type)
@@ -167,6 +168,7 @@ def decoder_stack_apply(
     *,
     cache: Optional[dict] = None,
     pos=None,
+    page_table=None,
     enc_out=None,
     bidir: bool = False,
     train: bool = True,
@@ -189,7 +191,8 @@ def decoder_stack_apply(
         def body(h, pl):
             p, win, c = pl
             h, nc, lb = attn_block_apply(
-                p, h, cfg, window=win, cache=c, pos=pos, enc_out=enc_out)
+                p, h, cfg, window=win, cache=c, pos=pos,
+                page_table=page_table, enc_out=enc_out)
             return h, (nc, lb)
         x, (new_caches, lbs) = jax.lax.scan(
             body, x, (params["layers"], windows, cache["layers"]))
@@ -371,9 +374,80 @@ def prefill(params, batch: dict, cfg: ModelConfig):
     return logits[:, -1]
 
 
+def prefill_with_cache(params, tokens: jax.Array, cache: dict, cfg: ModelConfig):
+    """Batched prompt prefill through the ring cache: ONE forward over the
+    (B, S) prompt block writes all S k/v rows per layer, replacing the seed
+    engine's S sequential ``decode_step`` calls.  Attn stacks only (SSM
+    states advance one token at a time).  Returns (last-position logits,
+    updated cache)."""
+    assert cfg.layer_kind == "attn", "batched cache prefill needs attn layers"
+    B, S = tokens.shape
+    dtype = _dtype(cfg)
+    pos = cache["pos"]
+    x = L.embed(params["embedding"], tokens, cfg, dtype)
+    inner = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_inner, _ = decoder_stack_apply(
+        params["decoder"], x, cfg, cache=inner, pos=pos, train=False)
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    logits = L.unembed(params["embedding"], x[:, -1:], cfg)
+    new_cache = dict(new_inner or {})
+    new_cache["pos"] = pos + S
+    return logits[:, 0], new_cache
+
+
+# ---- paged serving (continuous batching) ----------------------------------
+
+
+def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
+    """Paged KV pool for the whole stack: per-layer page arrays, stacked on a
+    leading layer axis so the scanned decoder threads them like any cache.
+    Page 0 is the sink page — free slots' page tables point at it."""
+    assert cfg.layer_kind == "attn", "paged KV cache needs attn layers"
+    dtype = _dtype(cfg)
+    one = {"attn": L.paged_cache_init(cfg, n_pages, page_size, dtype)}
+    return {"layers": _bcast(one, (cfg.n_layers,))}
+
+
+def paged_prefill(params, tokens: jax.Array, lengths: jax.Array,
+                  page_table: jax.Array, pool: dict, cfg: ModelConfig):
+    """One forward over a right-padded (B, S) prompt block, writing k/v for
+    every position through ``page_table`` into the shared pool.  Rows may
+    have different true ``lengths``; padded positions are written but never
+    attended (causal mask + the engine resets ``pos`` to the true length).
+    Returns (logits at each row's last real position, updated pool)."""
+    B, S = tokens.shape
+    dtype = _dtype(cfg)
+    pos0 = jnp.zeros((B,), jnp.int32)
+    x = L.embed(params["embedding"], tokens, cfg, dtype)
+    x, new_pool, _ = decoder_stack_apply(
+        params["decoder"], x, cfg, cache=pool, pos=pos0,
+        page_table=page_table, train=False)
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    idx = (jnp.maximum(lengths, 1) - 1)[:, None, None]
+    xl = jnp.take_along_axis(x, idx, axis=1)  # (B,1,d): last real position
+    logits = L.unembed(params["embedding"], xl, cfg)
+    return logits[:, 0], new_pool
+
+
+def paged_decode_step(params, tokens: jax.Array, page_table: jax.Array,
+                      pos: jax.Array, pool: dict, cfg: ModelConfig):
+    """One decode step for every slot: writes each token's k/v at ``pos[b]``
+    through the page table, attends over the gathered pages.  Entirely
+    device-side — no host round-trips."""
+    dtype = _dtype(cfg)
+    x = L.embed(params["embedding"], tokens[:, None], cfg, dtype)
+    x, new_pool, _ = decoder_stack_apply(
+        params["decoder"], x, cfg, cache=pool, pos=pos,
+        page_table=page_table, train=False)
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits[:, 0], new_pool
+
+
 __all__ = [
     "init_params", "forward", "loss_fn",
-    "init_decode_cache", "decode_step", "prefill",
+    "init_decode_cache", "decode_step", "prefill", "prefill_with_cache",
+    "init_paged_pool", "paged_prefill", "paged_decode_step",
     "decoder_stack_init", "decoder_stack_apply",
     "attn_block_init", "attn_block_apply",
 ]

@@ -1,3 +1,35 @@
-"""Serving: batched prefill + decode engine over the model zoo."""
+"""Serving runtime: continuous batching with a paged KV cache and
+CIM-cost-aware scheduling.
 
-from repro.serving.engine import GenerationConfig, ServeEngine  # noqa: F401
+Module map:
+  request.py   — ``Request``/``Sequence`` lifecycle (WAITING -> PREFILL ->
+                 DECODE -> FINISHED), per-request ``SamplingParams``,
+                 streaming ``on_token`` callbacks.
+  kv_pool.py   — ``PagedKVPool``: fixed-size pages, free-list allocation,
+                 per-sequence page tables, fragmentation stats.  Host-side
+                 twin of the device pool in
+                 ``models.transformer.init_paged_pool``.
+  scheduler.py — ``IterationScheduler``: joins new prefills into the
+                 in-flight decode batch each step under slot/page/latency
+                 budgets; pluggable ``CostModel`` with ``HBMCostModel``
+                 (weight-streaming roofline) and ``CIMCostModel`` (priced by
+                 the paper's CIM simulator — per-token latency/energy from
+                 ``cim.simulator.simulate``).
+  engine.py    — ``ContinuousBatchingEngine`` (batched bucketed prefill,
+                 jitted slot-batch decode with on-device sampling/EOS
+                 masking, lagged token harvest) and the legacy
+                 ``ServeEngine`` compat shim.
+
+The Pallas paged-gather attention kernel lives in ``kernels/paged.py``
+(oracle: ``kernels/ref.py::paged_attention_ref``); enable it with
+``ContinuousBatchingEngine(..., use_paged_kernel=True)``.
+"""
+
+from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
+                                  GenerationConfig, ServeEngine)
+from repro.serving.kv_pool import PagedKVPool, PoolOOM, PoolStats  # noqa: F401
+from repro.serving.request import (FinishReason, Request,  # noqa: F401
+                                   RequestState, SamplingParams, Sequence)
+from repro.serving.scheduler import (CIMCostModel, CostModel,  # noqa: F401
+                                     HBMCostModel, IterationScheduler,
+                                     SchedulerConfig)

@@ -1,22 +1,43 @@
-"""Batched serving engine: prefill once, decode step-by-step.
+"""Serving engines: continuous batching over the paged KV pool, plus the
+legacy single-batch ``ServeEngine`` kept as a compat shim.
 
-The jitted decode step donates the cache (in-place ring update), mirrors the
-dry-run's ``serve_step`` exactly, and supports greedy or temperature
-sampling.  Prefill fills the cache by streaming the prompt through
-``decode_step`` (cache-consistent by construction — tested against the full
-forward); a fused flash-prefill path is a perf-loop candidate.
+``ContinuousBatchingEngine`` is the tentpole runtime:
+
+  * requests join and leave the decode batch between steps (iteration-level
+    scheduling) — no batch restarts, no padding every slot to the longest
+    request;
+  * prompts prefill in ONE batched forward over the padded prompt block
+    (bucketed jit), writing straight into the paged pool;
+  * the decode step is a single jitted slot-batch function: page gather,
+    sampling, token feedback, and position advance all happen on device, so
+    the host never blocks the dispatch chain (the seed engine's
+    ``bool(jnp.all(done))`` per token is gone);
+  * sampled tokens are harvested with a one-step lag: step N+1 is dispatched
+    before step N's results are read back, keeping transfers off the
+    critical path;
+  * admission is priced by a pluggable cost model — see
+    ``scheduler.CIMCostModel`` for the CIM-simulator backend.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.kv_pool import PagedKVPool, PoolOOM, SINK_PAGE
+from repro.serving.request import (FinishReason, Request, RequestState,
+                                   SamplingParams, Sequence)
+from repro.serving.scheduler import (CostModel, IterationScheduler,
+                                     SchedulerConfig)
 
 
 @dataclasses.dataclass
@@ -27,13 +48,366 @@ class GenerationConfig:
     seed: int = 0
 
 
+def _sample_rows(logits: jax.Array, temps: jax.Array, keys: jax.Array
+                 ) -> jax.Array:
+    """Per-row sampling with per-row keys ((B,2) uint32, one PRNG stream per
+    request): greedy where temps <= 0, else temperature.  The categorical
+    draw sits behind a cond so all-greedy batches skip it."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def drawn(_):
+        safe = jnp.maximum(temps, 1e-6)[:, None]
+        d = jax.vmap(jax.random.categorical)(keys, logits / safe)
+        return jnp.where(temps <= 0.0, greedy, d.astype(jnp.int32))
+
+    return jax.lax.cond(jnp.any(temps > 0.0), drawn, lambda _: greedy, None)
+
+
+def _split_rows(keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B,2) per-row keys -> (draw keys, carried keys)."""
+    s = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return s[:, 0], s[:, 1]
+
+
+def _bucket(n: int, lo: int = 1) -> int:
+    return max(lo, 1 << (n - 1).bit_length())
+
+
+# Module-level jits with the (frozen, hashable) ModelConfig as a static arg:
+# every engine instance of the same config shares one compiled step, so
+# constructing an engine never retraces.
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def _decode_step_jit(params, pool, tok, pt, pos, active, temp, keys, *, cfg):
+    logits, pool = T.paged_decode_step(params, tok, pt, pos, pool, cfg)
+    draw, carry = _split_rows(keys)
+    sampled = _sample_rows(logits, temp, draw)
+    tok_new = jnp.where(active, sampled, tok)
+    pos_new = pos + active.astype(jnp.int32)
+    return pool, sampled, tok_new, pos_new, carry
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def _prefill_jit(params, pool, tokens, lengths, pt_rows, temp, keys, *, cfg):
+    logits, pool = T.paged_prefill(params, tokens, lengths, pt_rows, pool, cfg)
+    draw, carry = _split_rows(keys)
+    first = _sample_rows(logits, temp, draw)
+    return pool, first, carry
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _ring_decode_jit(params, tok, cache, *, cfg):
+    return T.decode_step(params, tok, cache, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _ring_prefill_jit(params, tokens, cache, *, cfg):
+    return T.prefill_with_cache(params, tokens, cache, cfg)
+
+
+class ContinuousBatchingEngine:
+    """Iteration-scheduled serving over a paged KV pool (attn stacks)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 page_size: int = 16, max_len: int = 512,
+                 n_pages: Optional[int] = None,
+                 scheduler_cfg: Optional[SchedulerConfig] = None,
+                 cost_model: Optional[CostModel] = None,
+                 use_paged_kernel: bool = False):
+        if cfg.layer_kind != "attn":
+            raise ValueError(
+                "continuous batching needs an attn stack; SSM/hybrid models "
+                "serve through the legacy ServeEngine")
+        if use_paged_kernel:
+            cfg = dataclasses.replace(cfg, paged_kernel=True)
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_len = max_len
+        self.max_pages_per_seq = math.ceil(max_len / page_size)
+        if n_pages is None:  # worst case: every slot at max_len, plus sink
+            n_pages = 1 + max_slots * self.max_pages_per_seq
+        self.pool_host = PagedKVPool(n_pages, page_size,
+                                     self.max_pages_per_seq)
+        self.pool = T.init_paged_pool(cfg, n_pages, page_size)
+        sc = scheduler_cfg or SchedulerConfig()
+        sc = dataclasses.replace(sc, max_slots=max_slots)
+        self.scheduler = IterationScheduler(sc, cost_model)
+
+        S, MP = max_slots, self.max_pages_per_seq
+        self.max_slots = S
+        self._tok = jnp.zeros((S,), jnp.int32)
+        self._pos = jnp.zeros((S,), jnp.int32)
+        self._active = jnp.zeros((S,), bool)
+        self._temp = jnp.zeros((S,), jnp.float32)
+        self._pt = jnp.full((S, MP), SINK_PAGE, jnp.int32)
+        self._keys = jnp.zeros((S, 2), jnp.uint32)  # per-request PRNG streams
+
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.running: dict[int, Sequence] = {}          # slot -> Sequence
+        self._free_slots = list(range(S - 1, -1, -1))
+        self._pending: list[dict] = []                  # un-harvested steps
+        self.step_idx = 0
+        self.stats = {"decode_steps": 0, "prefill_tokens": 0,
+                      "tokens_out": 0, "sim_latency_ns": 0.0,
+                      "sim_energy_nj": 0.0}  # step count: self.step_idx
+        self._decode = functools.partial(_decode_step_jit, cfg=self.cfg)
+        # compiled once per (rows, prompt) bucket, shared across instances
+        self._prefill = functools.partial(_prefill_jit, cfg=self.cfg)
+
+    # -- request intake ----------------------------------------------------
+
+    def add_request(self, prompt, sampling: Optional[SamplingParams] = None,
+                    on_token=None) -> Request:
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        req = Request(prompt=prompt, sampling=sampling or SamplingParams(),
+                      on_token=on_token)
+        if req.sampling.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if req.max_total_len > self.max_len:
+            raise PoolOOM(
+                f"prompt+max_new={req.max_total_len} exceeds max_len="
+                f"{self.max_len}")
+        need = self.pool_host.pages_for(req.max_total_len)
+        if need > self.pool_host.n_pages - 1:
+            # would block the FIFO head forever: no pool state can serve it
+            raise PoolOOM(
+                f"request needs {need} pages; pool has "
+                f"{self.pool_host.n_pages - 1} total")
+        req.arrived_step = self.step_idx
+        self.waiting.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running or self._pending)
+
+    # -- one scheduler iteration -------------------------------------------
+
+    def step(self) -> list[Request]:
+        """Dispatch one decode step, harvest the previous one, evict
+        finished sequences, admit new prefills.  Returns requests finished
+        this call."""
+        self.step_idx += 1
+        finished: list[Request] = []
+
+        if self.running:
+            finished.extend(self._extend_pages())
+        if self.running:  # dispatch before harvesting: keeps device busy
+            lat, nrg = self.scheduler.step_cost(list(self.running.values()))
+            self.stats["sim_latency_ns"] += lat
+            self.stats["sim_energy_nj"] += nrg
+            self.stats["decode_steps"] += 1
+            (self.pool, sampled, self._tok, self._pos,
+             self._keys) = self._decode(
+                self.params, self.pool, self._tok, self._pt, self._pos,
+                self._active, self._temp, self._keys)
+            for seq in self.running.values():
+                seq.pos_next += 1
+            self._pending.append({
+                "sampled": sampled,
+                "slots": list(self.running.items()),
+            })
+
+        # harvest everything but the step just dispatched (one-step lag)
+        keep_last = 1 if self.running else 0
+        while len(self._pending) > keep_last:
+            finished.extend(self._harvest(self._pending.pop(0)))
+
+        finished.extend(self._admit())
+        return finished
+
+    def run(self) -> list[Request]:
+        """Drive steps until every request has finished."""
+        done: list[Request] = []
+        while self.has_work():
+            done.extend(self.step())
+        return done
+
+    def generate(self, prompts: jax.Array, gen: GenerationConfig) -> jax.Array:
+        """Compat API: (B, S) prompts -> (B, max_new_tokens) tokens (rows
+        that hit EOS early are zero-padded)."""
+        B = prompts.shape[0]
+        if gen.max_new_tokens < 1:
+            return jnp.zeros((B, 0), jnp.int32)
+        # distinct per-row seeds: identical prompt rows must sample
+        # independent continuations, as the legacy batched draw did
+        reqs = [self.add_request(
+            prompts[b],
+            SamplingParams(max_new_tokens=gen.max_new_tokens,
+                           temperature=gen.temperature, eos_id=gen.eos_id,
+                           seed=gen.seed + b))
+            for b in range(B)]
+        self.run()
+        out = np.zeros((B, gen.max_new_tokens), np.int32)
+        for b, r in enumerate(reqs):
+            out[b, :len(r.output_tokens)] = r.output_tokens
+        return jnp.asarray(out)
+
+    # -- internals ---------------------------------------------------------
+
+    def _extend_pages(self) -> list[Request]:
+        """Grow prompt-only reservations before the next dispatch writes
+        past them (``reserve_full_output=False``).  With full reservation
+        the page table always covers the write position and this is a
+        no-op.  On a full pool, un-harvested steps are drained first —
+        a sequence that already sampled its final token frees its pages and
+        may itself leave ``running``.  Returns requests finished by that
+        early drain."""
+        updates: list[tuple[int, Sequence, np.ndarray]] = []
+        finished: list[Request] = []
+        for slot, seq in list(self.running.items()):
+            if self.running.get(slot) is not seq:
+                continue  # evicted by a drain below, earlier in this loop
+            needed = seq.pos_next + 1  # tokens covered after this dispatch
+            if self.pool_host.pages_for(needed) <= len(seq.page_ids):
+                continue
+            try:
+                new = self.pool_host.extend(seq.req_id, needed)
+            except PoolOOM:
+                while self._pending:  # harvest may evict + free pages
+                    finished.extend(self._harvest(self._pending.pop(0)))
+                if self.running.get(slot) is not seq:
+                    continue  # the starved sequence was itself finished
+                try:
+                    new = self.pool_host.extend(seq.req_id, needed)
+                except PoolOOM as e:
+                    raise RuntimeError(
+                        "KV pool exhausted mid-decode; preemption is not "
+                        "supported — use reserve_full_output=True or a "
+                        f"larger pool ({e})") from e
+            seq.page_ids.extend(new)
+            row = np.full((self.max_pages_per_seq,), SINK_PAGE, np.int32)
+            row[:len(seq.page_ids)] = seq.page_ids
+            updates.append((slot, seq, row))
+        # a drain may have evicted a sequence after its row was built; its
+        # slot's table already points at the sink and must stay there
+        live = [(s, r) for s, q, r in updates if self.running.get(s) is q]
+        if live:
+            idx = np.asarray([s for s, _ in live])
+            rows = np.stack([r for _, r in live])
+            self._pt = self._pt.at[idx].set(rows)
+        return finished
+
+    def _harvest(self, entry: dict) -> list[Request]:
+        sampled = np.asarray(entry["sampled"])
+        finished = []
+        for slot, seq in entry["slots"]:
+            req = seq.request
+            if req.state is not RequestState.DECODE:
+                continue  # finished by an earlier harvest; stale lag entry
+            self._emit(seq, int(sampled[slot]))
+            if req.state is RequestState.FINISHED:
+                finished.append(req)
+        return finished
+
+    def _emit(self, seq: Sequence, token: int) -> None:
+        req = seq.request
+        req.emit(token)
+        seq.length += 1
+        self.pool_host.advance(req.req_id, 1)
+        self.stats["tokens_out"] += 1
+        sp = req.sampling
+        if sp.eos_id is not None and token == sp.eos_id:
+            req.finish(FinishReason.EOS, self.step_idx)
+        elif len(req.output_tokens) >= sp.max_new_tokens:
+            req.finish(FinishReason.LENGTH, self.step_idx)
+        if req.state is RequestState.FINISHED:
+            self._evict(seq)
+
+    def _evict(self, seq: Sequence) -> None:
+        slot = seq.slot
+        self.pool_host.free(seq.req_id)
+        self.running.pop(slot)
+        self._free_slots.append(slot)
+        self._active = self._active.at[slot].set(False)
+        self._pt = self._pt.at[slot].set(SINK_PAGE)
+        self._pos = self._pos.at[slot].set(0)
+
+    def _admit(self) -> list[Request]:
+        """Admit + prefill the scheduler's picks; returns requests that
+        finished on their very first (prefill-sampled) token."""
+        admits = self.scheduler.plan_admissions(
+            list(self.waiting), list(self.running.values()), self.pool_host)
+        if not admits:
+            return []
+        MP = self.max_pages_per_seq
+        rows, slots, lengths, temps, key_rows = [], [], [], [], []
+        seqs: list[Sequence] = []
+        max_prompt = max(r.prompt_len for r in admits)
+        # cap the prompt bucket at the page-table span: padded positions must
+        # stay addressable (beyond-reservation entries resolve to the sink)
+        Sb = min(_bucket(max_prompt), MP * self.page_size)
+        nb = _bucket(len(admits))
+        for req in admits:
+            self.waiting.popleft()
+            req.state = RequestState.PREFILL
+            req.admitted_step = self.step_idx
+            reserve = self.scheduler.cfg.reserve_tokens(req)
+            pages = self.pool_host.allocate(req.req_id, reserve)
+            self.pool_host.advance(req.req_id, req.prompt_len)
+            slot = self._free_slots.pop()
+            seq = Sequence(request=req, slot=slot, page_ids=pages,
+                           length=req.prompt_len, pos_next=req.prompt_len)
+            self.running[slot] = seq
+            seqs.append(seq)
+            slots.append(slot)
+            lengths.append(req.prompt_len)
+            temps.append(req.sampling.temperature)
+            key_rows.append(np.asarray(jax.random.PRNGKey(req.sampling.seed)))
+            rows.append(req.prompt + [0] * (Sb - req.prompt_len))
+        self.stats["prefill_tokens"] += sum(lengths)
+
+        # pad the row dimension to its bucket (padded rows write to the sink)
+        pad = nb - len(admits)
+        tokens = np.asarray(rows + [[0] * Sb] * pad, np.int32)
+        lens = np.asarray(lengths + [1] * pad, np.int32)
+        tmp = np.asarray(temps + [0.0] * pad, np.float32)
+        keys = np.stack(key_rows + [np.zeros(2, np.uint32)] * pad)
+        pt_rows = np.full((nb, MP), SINK_PAGE, np.int32)
+        for i, seq in enumerate(seqs):
+            pt_rows[i, :len(seq.page_ids)] = seq.page_ids
+
+        self.pool, first, carry = self._prefill(
+            self.params, self.pool, jnp.asarray(tokens), jnp.asarray(lens),
+            jnp.asarray(pt_rows), jnp.asarray(tmp), jnp.asarray(keys))
+
+        idx = np.asarray(slots)
+        self._pt = self._pt.at[idx].set(pt_rows[:len(seqs)])
+        self._pos = self._pos.at[idx].set(lens[:len(seqs)])
+        self._temp = self._temp.at[idx].set(tmp[:len(seqs)])
+        self._active = self._active.at[idx].set(True)
+        self._tok = self._tok.at[idx].set(first[:len(seqs)])
+        self._keys = self._keys.at[idx].set(carry[:len(seqs)])
+
+        first_host = np.asarray(first)
+        for i, seq in enumerate(seqs):
+            seq.request.state = RequestState.DECODE
+            self._emit(seq, int(first_host[i]))
+        return [s.request for s in seqs
+                if s.request.state is RequestState.FINISHED]
+
+
 class ServeEngine:
+    """Legacy single-batch engine, kept as a compat shim.
+
+    Fixed relative to the seed: (1) attn stacks prefill the whole prompt
+    block in ONE forward through the ring cache instead of S sequential
+    decode steps; (2) the decode loop never syncs on the host — all
+    ``max_new_tokens`` steps are dispatched back-to-back and EOS trimming
+    happens once at the end on a single fetched array, reproducing the old
+    early-break output exactly (the seed also kept decoding rows that had
+    already hit EOS until ALL rows were done).
+    """
+
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self._decode = jax.jit(
-            lambda p, t, c: T.decode_step(p, t, c, cfg), donate_argnums=(2,))
+        self._decode = functools.partial(_ring_decode_jit, cfg=cfg)
+        self._prefill = None
+        if cfg.layer_kind == "attn":
+            self._prefill = functools.partial(_ring_prefill_jit, cfg=cfg)
 
     def _sample(self, logits, key, temperature):
         if temperature <= 0.0:
@@ -42,26 +416,33 @@ class ServeEngine:
                                       ).astype(jnp.int32)
 
     def generate(self, prompts: jax.Array, gen: GenerationConfig):
-        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
+        """prompts: (B, S_prompt) int32 -> (B, <=max_new_tokens) int32."""
         B, S = prompts.shape
+        if gen.max_new_tokens < 1:
+            return jnp.zeros((B, 0), jnp.int32)
         cache = T.init_decode_cache(self.cfg, B, self.max_len)
         key = jax.random.PRNGKey(gen.seed)
-        logits = None
-        for t in range(S):  # prefill via the decode path (cache-exact)
-            logits, cache = self._decode(self.params, prompts[:, t], cache)
-        outs = []
-        done = jnp.zeros((B,), bool)
+        if self._prefill is not None:
+            logits, cache = self._prefill(self.params, prompts, cache)
+        else:  # SSM/hybrid states advance token-by-token
+            logits = None
+            for t in range(S):
+                logits, cache = self._decode(self.params, prompts[:, t], cache)
         tok = self._sample(logits, key, gen.temperature)
-        for i in range(gen.max_new_tokens):
-            outs.append(tok)
-            if gen.eos_id is not None:
-                done = done | (tok == gen.eos_id)
-                if bool(jnp.all(done)):
-                    break
+        outs = [tok]
+        for _ in range(gen.max_new_tokens - 1):
             logits, cache = self._decode(self.params, tok, cache)
             key, sub = jax.random.split(key)
             tok = self._sample(logits, sub, gen.temperature)
-        return jnp.stack(outs, axis=1)
+            outs.append(tok)
+        out = jnp.stack(outs, axis=1)
+        if gen.eos_id is not None:  # single host fetch, then trim
+            arr = np.asarray(out)
+            done = np.cumsum(arr == gen.eos_id, axis=1) > 0
+            cols = done.all(axis=0)
+            if cols.any():
+                out = out[:, :int(np.argmax(cols)) + 1]
+        return out
 
 
-__all__ = ["ServeEngine", "GenerationConfig"]
+__all__ = ["ContinuousBatchingEngine", "ServeEngine", "GenerationConfig"]

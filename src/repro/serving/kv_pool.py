@@ -1,0 +1,138 @@
+"""Paged KV-cache pool: fixed-size pages, free-list allocation, per-sequence
+page tables.
+
+This is the host-side bookkeeping half of the paged cache (the device half
+— the per-layer page arrays — lives in ``models.transformer.init_paged_pool``
+and is owned by the engine).  Replaces the monolithic per-batch ring cache:
+memory is reserved per sequence in page granules, so short and long
+sequences coexist without padding every slot to ``max_len``, and a finished
+sequence's pages return to the free list immediately.
+
+Page 0 is reserved as the sink page: free decode slots point their whole
+page table at it, so their (masked, discarded) writes never touch live data.
+
+Invariants (property-tested in tests/test_serving.py):
+  * a page is owned by at most one sequence;
+  * free + allocated == n_pages - 1 (the sink page is neither);
+  * allocation fails cleanly (``PoolOOM``) rather than oversubscribing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+SINK_PAGE = 0
+
+
+class PoolOOM(RuntimeError):
+    """No free pages for the requested reservation."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolStats:
+    n_pages: int           # usable pages (sink excluded)
+    free_pages: int
+    allocated_pages: int
+    n_seqs: int
+    utilization: float     # live tokens / allocated capacity (fragmentation)
+
+
+class PagedKVPool:
+    """Free-list page allocator with per-sequence page tables."""
+
+    def __init__(self, n_pages: int, page_size: int,
+                 max_pages_per_seq: Optional[int] = None):
+        if n_pages < 2:
+            raise ValueError("need at least one usable page beyond the sink")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        # LIFO free list keeps recently-freed (cache-warm) pages hot
+        self._free: list[int] = list(range(n_pages - 1, SINK_PAGE, -1))
+        self._tables: dict[int, list[int]] = {}   # seq_id -> page ids
+        self._lengths: dict[int, int] = {}        # seq_id -> live tokens
+
+    # -- queries -----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        n = self.pages_for(n_tokens)
+        if self.max_pages_per_seq is not None and n > self.max_pages_per_seq:
+            return False
+        return n <= self.free_pages
+
+    def page_table(self, seq_id: int) -> list[int]:
+        return list(self._tables[seq_id])
+
+    def stats(self) -> PoolStats:
+        allocated = sum(len(t) for t in self._tables.values())
+        capacity = allocated * self.page_size
+        live = sum(self._lengths.values())
+        return PoolStats(
+            n_pages=self.n_pages - 1,
+            free_pages=self.free_pages,
+            allocated_pages=allocated,
+            n_seqs=len(self._tables),
+            utilization=live / capacity if capacity else 1.0,
+        )
+
+    # -- allocation --------------------------------------------------------
+
+    def allocate(self, seq_id: int, n_tokens: int) -> list[int]:
+        """Reserve pages for ``n_tokens`` and return the page table."""
+        if seq_id in self._tables:
+            raise ValueError(f"sequence {seq_id} already allocated")
+        n = self.pages_for(n_tokens)
+        if self.max_pages_per_seq is not None and n > self.max_pages_per_seq:
+            raise PoolOOM(
+                f"{n} pages exceed per-seq limit {self.max_pages_per_seq}")
+        if n > self.free_pages:
+            raise PoolOOM(f"need {n} pages, {self.free_pages} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._tables[seq_id] = pages
+        self._lengths[seq_id] = 0
+        return list(pages)
+
+    def extend(self, seq_id: int, n_tokens: int) -> list[int]:
+        """Grow a sequence's reservation to cover ``n_tokens`` total."""
+        table = self._tables[seq_id]
+        need = self.pages_for(n_tokens) - len(table)
+        if need <= 0:
+            return []
+        if (self.max_pages_per_seq is not None
+                and len(table) + need > self.max_pages_per_seq):
+            raise PoolOOM("per-seq page limit exceeded")
+        if need > self.free_pages:
+            raise PoolOOM(f"need {need} pages, {self.free_pages} free")
+        new = [self._free.pop() for _ in range(need)]
+        table.extend(new)
+        return new
+
+    def advance(self, seq_id: int, n_tokens: int = 1) -> None:
+        """Record ``n_tokens`` more live tokens (utilization accounting)."""
+        self._lengths[seq_id] += n_tokens
+
+    def free(self, seq_id: int) -> None:
+        pages = self._tables.pop(seq_id)
+        self._lengths.pop(seq_id)
+        self._free.extend(reversed(pages))
+
+    def check_invariants(self) -> None:
+        """Raise AssertionError if the pool state is inconsistent."""
+        allocated = [p for t in self._tables.values() for p in t]
+        assert SINK_PAGE not in allocated, "sink page allocated"
+        assert SINK_PAGE not in self._free, "sink page on free list"
+        everything = allocated + self._free
+        assert len(everything) == len(set(everything)), "page double-owned"
+        assert len(everything) == self.n_pages - 1, "pages leaked"
+
+
+__all__ = ["PagedKVPool", "PoolOOM", "PoolStats", "SINK_PAGE"]

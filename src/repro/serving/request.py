@@ -1,0 +1,101 @@
+"""Request / sequence lifecycle for the continuous-batching engine.
+
+A ``Request`` is the user-facing handle: prompt, per-request sampling
+params, streamed output tokens, and a state machine
+
+    WAITING -> PREFILL -> DECODE -> FINISHED
+
+``Sequence`` is the scheduled unit: the slot index in the decode batch, the
+sequence's page allocation, and its running length.  One request owns
+exactly one sequence (beam/parallel sampling would fan a request out into
+several; that is future work, see ROADMAP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Callable, Optional
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"    # queued, no pages, no slot
+    PREFILL = "prefill"    # admitted this step: pages allocated, prompt runs
+    DECODE = "decode"      # in the decode batch, one token per engine step
+    FINISHED = "finished"  # eos / length cap reached; slot + pages released
+
+
+class FinishReason(enum.Enum):
+    EOS = "eos"
+    LENGTH = "length"
+    ABORTED = "aborted"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+_req_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    # called with (request, token) as each token is produced
+    on_token: Optional[Callable[["Request", int], None]] = None
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+    state: RequestState = RequestState.WAITING
+    output_tokens: list[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[FinishReason] = None
+    # iteration indices, for per-request latency accounting
+    arrived_step: int = -1
+    admitted_step: int = -1
+    finished_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.output_tokens)
+
+    @property
+    def max_total_len(self) -> int:
+        """Worst-case token footprint, used for page reservation."""
+        return len(self.prompt) + self.sampling.max_new_tokens
+
+    def emit(self, token: int) -> None:
+        self.output_tokens.append(token)
+        if self.on_token is not None:
+            self.on_token(self, token)
+
+    def finish(self, reason: FinishReason, step: int) -> None:
+        self.state = RequestState.FINISHED
+        self.finish_reason = reason
+        self.finished_step = step
+
+
+@dataclasses.dataclass
+class Sequence:
+    """One scheduled sequence: slot + pages + running length."""
+
+    request: Request
+    slot: int
+    page_ids: list[int]    # physical pages, in logical order
+    length: int            # tokens emitted + prompt (host view)
+    pos_next: int = 0      # device write position of the NEXT decode dispatch
+
+    @property
+    def req_id(self) -> int:
+        return self.request.req_id
+
+
+__all__ = ["Request", "RequestState", "FinishReason", "SamplingParams",
+           "Sequence"]

@@ -1,0 +1,191 @@
+"""Iteration-level admission scheduler with a pluggable step-cost model.
+
+Every engine step the scheduler decides which WAITING requests join the
+in-flight decode batch (continuous batching: joins and evictions happen
+between steps, never by restarting the batch).  Admission is bounded by
+
+  * free decode slots (static batch width of the jitted step),
+  * free KV pages (conservative reservation: prompt + max_new_tokens, so an
+    admitted sequence can never OOM mid-flight — preemption is future work),
+  * a per-step prefill token budget (head-of-line blocking control),
+  * optionally, a step-latency budget priced by the cost model.
+
+Two cost models ship:
+
+``HBMCostModel`` — the classic weight-streaming roofline: one step reads
+every weight byte once (amortized over the whole batch) plus each
+sequence's KV history, so marginal decode cost per extra sequence is tiny
+and the scheduler batches as wide as it can.
+
+``CIMCostModel`` — prices the step with the paper's CIM simulator
+(``cim.simulator.simulate`` over ``cim.workload.decode_workload``): weights
+are *stationary* in the arrays, so there is no weight-read amortization —
+each sequence bit-serially streams its activations through the same DAC/ADC
+cycles and per-step latency grows ~linearly with batch size.  Under a
+latency SLO this makes the CIM scheduler admit *fewer* concurrent decodes
+than the HBM heuristic would — batch composition driven by simulated
+per-token latency/energy, which is exactly the point of the hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Sequence as Seq
+
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.request import Request, Sequence
+
+
+class CostModel(Protocol):
+    def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
+        """Predicted latency of one decode step over ``n_seqs`` sequences."""
+        ...
+
+    def prefill_ns(self, n_tokens: int) -> float:
+        """Predicted latency of prefilling ``n_tokens`` prompt tokens."""
+        ...
+
+    def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
+        """Predicted energy of one decode step (0 if not modeled)."""
+        ...
+
+
+@dataclasses.dataclass
+class HBMCostModel:
+    """Bytes-moved roofline for a weight-streaming (GPU/HBM) backend."""
+
+    n_params: int                 # active parameters per token
+    kv_bytes_per_token: float     # 2 * n_layers * n_kv_heads * hd * dtype
+    bytes_per_param: float = 2.0
+    bandwidth_gbps: float = 400.0
+
+    def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
+        weight_bytes = self.n_params * self.bytes_per_param
+        kv_bytes = n_seqs * avg_ctx * self.kv_bytes_per_token
+        return (weight_bytes + kv_bytes) / self.bandwidth_gbps
+
+    def prefill_ns(self, n_tokens: int) -> float:
+        # prefill is compute-bound; approximate with one weight pass
+        return self.n_params * self.bytes_per_param / self.bandwidth_gbps
+
+    def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
+        return 0.0
+
+    @classmethod
+    def from_model_config(cls, cfg, **kw) -> "HBMCostModel":
+        kvb = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2.0
+        return cls(n_params=cfg.active_param_count(),
+                   kv_bytes_per_token=kvb, **kw)
+
+
+class CIMCostModel:
+    """Step cost from the paper's CIM simulator (Table-I composition).
+
+    ``per_token_ns``/``per_token_nj`` come from one ``simulate`` call over
+    the model's decode workload under the chosen mapping strategy; decoding
+    ``n`` sequences costs ``n x`` that (weights-stationary arrays process
+    each sequence's bit-serial activation stream in turn), plus a DPU term
+    for the non-parameterized attention matmuls that grows with context.
+    """
+
+    def __init__(self, model_cfg, strategy: str = "sparse",
+                 cim_cfg=None, seq_len: int = 512,
+                 attn_dpu_ns_per_key: float = 0.05):
+        from repro.cim.simulator import simulate
+        from repro.cim.spec import CIMConfig
+        from repro.cim.workload import decode_workload
+
+        self.strategy = strategy
+        self._cfg = cim_cfg or CIMConfig()
+        desc = decode_workload(model_cfg, seq_len=seq_len)
+        r = simulate(desc, strategy, self._cfg)
+        self.per_token_ns = r.latency_ns_per_token
+        self.per_token_nj = r.energy_nj_per_token
+        self.attn_dpu_ns_per_key = attn_dpu_ns_per_key
+
+    def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
+        attn = self.attn_dpu_ns_per_key * avg_ctx
+        return n_seqs * (self.per_token_ns + attn)
+
+    def prefill_ns(self, n_tokens: int) -> float:
+        return n_tokens * self.per_token_ns
+
+    def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
+        return n_seqs * self.per_token_nj
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_slots: int = 8                 # decode-batch width of the jitted step
+    max_prefill_tokens: int = 2048     # prompt tokens admitted per step
+    step_latency_budget_ns: Optional[float] = None
+    # True: pages for prompt + max_new reserved up front (can never OOM
+    # mid-flight).  False: prompt-only reservation, pages appended as decode
+    # crosses page boundaries — denser packing, but a full pool mid-decode
+    # is a hard error (preemption is future work).
+    reserve_full_output: bool = True
+
+    def reserve_tokens(self, req: Request) -> int:
+        """Token span to reserve pages for at admission.  The single source
+        of truth — the engine's allocate must match plan_admissions."""
+        return req.max_total_len if self.reserve_full_output else req.prompt_len
+
+
+class IterationScheduler:
+    """FIFO admission under slot / page / prefill / latency budgets."""
+
+    def __init__(self, cfg: SchedulerConfig,
+                 cost_model: Optional[CostModel] = None):
+        self.cfg = cfg
+        self.cost_model = cost_model
+
+    def plan_admissions(self, waiting: Seq[Request], running: Seq[Sequence],
+                        pool: PagedKVPool) -> list[Request]:
+        """Pick the prefix of the waiting queue that joins this step.
+
+        Strict FIFO: the first request that does not fit stops admission
+        (no skip-ahead, no starvation).
+        """
+        admits: list[Request] = []
+        free_slots = self.cfg.max_slots - len(running)
+        pages_left = pool.free_pages
+        prefill_toks = 0
+        n = len(running)
+        avg_ctx = (sum(s.length for s in running) / n) if n else 0.0
+        for req in waiting:
+            if free_slots <= 0:
+                break
+            need = pool.pages_for(self.cfg.reserve_tokens(req))
+            if need > pages_left:
+                break
+            if admits and prefill_toks + req.prompt_len > self.cfg.max_prefill_tokens:
+                break  # always let at least one prefill through
+            if (self.cost_model is not None
+                    and self.cfg.step_latency_budget_ns is not None
+                    and n > 0):
+                # the admission step pays this request's prefill on top of
+                # the widened decode batch
+                projected = (
+                    self.cost_model.decode_step_ns(n + 1, avg_ctx)
+                    + self.cost_model.prefill_ns(prefill_toks + req.prompt_len))
+                if projected > self.cfg.step_latency_budget_ns:
+                    break
+            admits.append(req)
+            free_slots -= 1
+            pages_left -= need
+            prefill_toks += req.prompt_len
+            n += 1
+        return admits
+
+    def step_cost(self, running: Seq[Sequence]) -> tuple[float, float]:
+        """(latency_ns, energy_nj) estimate for the current decode batch."""
+        if self.cost_model is None or not running:
+            return (0.0, 0.0)
+        n = len(running)
+        avg_ctx = sum(s.length for s in running) / n
+        return (self.cost_model.decode_step_ns(n, avg_ctx),
+                self.cost_model.decode_step_nj(n, avg_ctx))
+
+
+__all__ = ["CostModel", "HBMCostModel", "CIMCostModel", "SchedulerConfig",
+           "IterationScheduler"]

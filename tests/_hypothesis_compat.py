@@ -1,0 +1,42 @@
+"""Optional-dependency shim for hypothesis.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt).  When it is
+missing, the property tests must *skip*, not break collection of the whole
+module — the non-property tests in the same files are the tier-1 smoke
+coverage.  Importing ``given/settings/st`` from here instead of from
+``hypothesis`` gives exactly that: with hypothesis installed the real
+objects are re-exported; without it, ``@given(...)`` turns the test into a
+``pytest.mark.skip`` and ``st.*``/``settings`` become inert stand-ins.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when dev deps absent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        """Inert ``strategies`` stand-in: any strategy call returns None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -9,7 +9,7 @@ Monarch oracle exactly.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep: skips when absent
 
 import jax
 import jax.numpy as jnp

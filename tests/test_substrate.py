@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep: skips when absent
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import DataConfig, make_batches, synthetic_stream
