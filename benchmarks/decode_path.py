@@ -1,0 +1,247 @@
+"""Decode fast-path micro-benchmark: quantization x fusion x batch.
+
+Sweeps {fp32, int8, int4} weights x {separate, fused} projections x batch
+{1, 8, 32} over a Monarch decoder stack and reports, per variant:
+
+  * measured CPU wall-clock tok/s (interleaved best-of-N timing),
+  * weight bytes per token (measured from the actual parameter tree), and
+  * memory-bound decode tok/s from the dtype-aware ``HBMCostModel`` — the
+    weight-streaming roofline the serving scheduler itself prices with.
+
+``separate`` is the seed-shaped path: every layer dispatched as its own
+jitted call with separate Q/K/V and gate/up projections and **host-side
+greedy sampling** (the seed engine fetched logits and synced the host every
+token — ``num_layers`` dispatch chains + one round-trip per step).
+``fused`` is the fast path prepared by
+``models/decode_path.prepare_decode_params``: fused QKV + gate/up
+projections, int8/int4 per-block factors, ONE jitted stacked-layer scan per
+token with donated cache and on-device token feedback
+(``transformer.decode_step``).
+
+Interpretation note (also in ROADMAP.md): decode on this 2-core CPU
+container is **compute-bound** — dequantization adds back the work it saves
+in bytes, so the measured CPU speedup of int8 reflects fusion/stacking
+only (~1.1x).  The paper's premise (and any weight-streaming accelerator)
+is the **memory-bound** regime, where tok/s follows bytes moved: that is
+the ``roofline_tok_s`` column, priced from the measured per-tree bytes —
+the same convention ``benchmarks/kernel_bench.py`` uses for Pallas-kernel
+performance ("assessed structurally by the roofline").
+
+Emits BENCH_decode.json:
+  {"results": [{"quant": "int8", "mode": "fused", "batch": 8,
+    "cpu_tok_s": ..., "roofline_tok_s": ..., "ms_per_step": ...,
+    "weight_bytes_per_token": ...}, ...],
+   "headline": {"cpu_speedup": ..., "roofline_speedup": ...,
+                "byte_reduction": ..., ...}}     # at batch 8
+
+Run:  PYTHONPATH=src python benchmarks/decode_path.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear import MonarchSpec
+from repro.core.quant import tree_weight_bytes
+from repro.models import decode_path as DP
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.scheduler import HBMCostModel
+
+# Paper-scale projection widths (BERT/GPT2-medium d_model), small vocab so
+# the (untransformed, fp32) LM head doesn't dominate the projection path
+# this benchmark targets.
+CFG = ModelConfig(
+    name="decode-bench", d_model=1024, n_layers=6, n_heads=16, n_kv_heads=16,
+    d_ff=2048, vocab=512, dtype="float32",
+    monarch=MonarchSpec(enable=True, min_dim=256),
+)
+
+QUANT_BITS = {"fp32": None, "int8": 8, "int4": 4}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _embed(params, tok, cfg):
+    return L.embed(params["embedding"], tok[:, None], cfg, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "window"),
+                   donate_argnums=(2,))
+def _layer_step(p_i, x, c_i, pos, cfg, window):
+    x, nc, _ = T.attn_block_apply(p_i, x, cfg, window=window, cache=c_i,
+                                  pos=pos)
+    return x, nc
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _head_logits(params, x, cfg):
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    return L.unembed(params["embedding"], x, cfg)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _fused_step(params, tok, cache, cfg):
+    logits, cache = T.decode_step(params, tok, cache, cfg)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def _decode_separate(params, cfg, tok, steps: int):
+    """Seed-shaped decode: per-layer dispatch chains + host-side greedy
+    sampling (one device round-trip per token, as the seed engine did)."""
+    B = tok.shape[0]
+    windows = T._layer_windows(cfg)
+    layer_ps = [DP.layer_slice(params["decoder"]["layers"], i)
+                for i in range(cfg.n_layers)]
+    cache = T.init_decode_cache(cfg, B, steps + 2)
+    layer_cs = [DP.layer_slice(cache["layers"], i)
+                for i in range(cfg.n_layers)]
+    pos = jnp.zeros((B,), jnp.int32)
+    tok_host = np.asarray(tok)
+    for _ in range(steps):
+        x = _embed(params, jnp.asarray(tok_host), cfg)
+        for i in range(cfg.n_layers):
+            x, layer_cs[i] = _layer_step(layer_ps[i], x, layer_cs[i], pos,
+                                         cfg, int(windows[i]))
+        logits = np.asarray(_head_logits(params, x, cfg))
+        tok_host = np.argmax(logits, axis=-1).astype(np.int32)
+        pos = pos + 1
+    return jnp.asarray(tok_host)
+
+
+def _decode_fused(params, cfg, tok, steps: int):
+    """Fast path: one jitted stacked-layer scan per token, donated cache,
+    token feedback on device."""
+    cache = T.init_decode_cache(cfg, tok.shape[0], steps + 2)
+    for _ in range(steps):
+        tok, cache = _fused_step(params, tok, cache, cfg)
+    return tok
+
+
+def _roofline_tok_s(cfg, params, B: int, ctx: float) -> float:
+    """Memory-bound decode throughput for the ACTUAL parameter tree: one
+    step streams every weight byte once (amortized over the batch) plus the
+    KV history — ``HBMCostModel`` with dtype-priced bytes_per_param."""
+    cm = HBMCostModel.from_params(cfg, params)
+    return B / (cm.decode_step_ns(B, ctx) * 1e-9)
+
+
+def run_sweep(batches=(1, 8, 32), steps: int = 24, repeats: int = 5) -> dict:
+    """Interleaved best-of-N timing: every (quant, mode) variant is measured
+    once per round, rounds repeat, and each variant keeps its minimum — so
+    slow phases of a noisy 2-core container hit all variants alike instead
+    of biasing whichever one owned that time slice."""
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    variants = []
+    for quant, bits in QUANT_BITS.items():
+        for mode in ("separate", "fused"):
+            p = DP.prepare_decode_params(params, CFG, fuse=(mode == "fused"),
+                                         bits=bits)
+            fn = _decode_fused if mode == "fused" else _decode_separate
+            variants.append((quant, mode, p, fn,
+                             tree_weight_bytes(p["decoder"])))
+    results = []
+    for B in batches:
+        tok = jnp.zeros((B,), jnp.int32)
+        for _, _, p, fn, _ in variants:  # compile/warm everything up front
+            jax.block_until_ready(fn(p, CFG, tok, steps))
+        best = [float("inf")] * len(variants)
+        for _ in range(repeats):
+            for i, (_, _, p, fn, _) in enumerate(variants):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(p, CFG, tok, steps))
+                best[i] = min(best[i], time.perf_counter() - t0)
+        for (quant, mode, p, _, wbytes), dt in zip(variants, best):
+            results.append({
+                "quant": quant, "mode": mode, "batch": B,
+                "cpu_tok_s": B * steps / dt,
+                "roofline_tok_s": _roofline_tok_s(CFG, p, B, steps),
+                "ms_per_step": dt / steps * 1e3,
+                "weight_bytes_per_token": wbytes / B,
+            })
+            r = results[-1]
+            print(f"{quant:5s} {mode:9s} B={B:<3d} "
+                  f"cpu={r['cpu_tok_s']:7.1f} tok/s  "
+                  f"roofline={r['roofline_tok_s']:9.1f} tok/s  "
+                  f"{r['weight_bytes_per_token'] / 1e3:8.1f} KB/tok")
+    return {"bench": "decode_path", "config": {
+        "d_model": CFG.d_model, "n_layers": CFG.n_layers,
+        "steps": steps, "repeats": repeats}, "results": results,
+        "headline": _headline(results)}
+
+
+def _headline(results: list[dict], batch: int = 8) -> dict:
+    def pick(quant, mode):
+        rs = [r for r in results
+              if r["quant"] == quant and r["mode"] == mode
+              and r["batch"] == batch]
+        return rs[0] if rs else None
+
+    base, fast = pick("fp32", "separate"), pick("int8", "fused")
+    if not (base and fast):
+        return {}
+    return {
+        "batch": batch,
+        "fp32_separate_cpu_tok_s": base["cpu_tok_s"],
+        "int8_fused_cpu_tok_s": fast["cpu_tok_s"],
+        # wall clock on this container: decode is COMPUTE-bound here, so
+        # this reflects fusion/stacking only (see module docstring)
+        "cpu_speedup": fast["cpu_tok_s"] / base["cpu_tok_s"],
+        # the memory-bound decode regime the optimization targets: tok/s
+        # follows weight bytes moved (measured per tree, modeled bandwidth)
+        "roofline_speedup": (fast["roofline_tok_s"]
+                             / base["roofline_tok_s"]),
+        "byte_reduction": (base["weight_bytes_per_token"]
+                           / fast["weight_bytes_per_token"]),
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    """benchmarks.run protocol: reduced sweep, rows + BENCH_decode.json."""
+    payload = run_sweep(batches=(8,), steps=12, repeats=3)
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    rows = []
+    for r in payload["results"]:
+        us = r["ms_per_step"] * 1e3
+        rows.append((
+            f"decode/{r['quant']}_{r['mode']}_b{r['batch']}", us,
+            f"cpu_tok_s={r['cpu_tok_s']:.1f} "
+            f"roofline_tok_s={r['roofline_tok_s']:.0f} "
+            f"kb_per_tok={r['weight_bytes_per_token'] / 1e3:.1f}"))
+    hl = payload["headline"]
+    if hl:
+        rows.append(("decode/headline_b8", 0.0,
+                     f"roofline={hl['roofline_speedup']:.2f}x "
+                     f"bytes={hl['byte_reduction']:.2f}x "
+                     f"cpu={hl['cpu_speedup']:.2f}x"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args()
+    payload = run_sweep(steps=args.steps, repeats=args.repeats)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    hl = payload["headline"]
+    print(f"wrote {args.out}")
+    if hl:
+        print(f"int8 fused vs fp32 separate at batch 8: "
+              f"{hl['roofline_speedup']:.2f}x memory-bound roofline, "
+              f"{hl['byte_reduction']:.2f}x fewer weight bytes/token, "
+              f"{hl['cpu_speedup']:.2f}x CPU wall clock (compute-bound)")
+
+
+if __name__ == "__main__":
+    main()

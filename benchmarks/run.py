@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.fig8_adc_dse",
     "benchmarks.d2s_quality",
     "benchmarks.kernel_bench",
+    "benchmarks.decode_path",
     "benchmarks.roofline",
 ]
 

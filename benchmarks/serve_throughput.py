@@ -7,9 +7,15 @@ the continuous engine serves them through the paged-KV slot batch.  Greedy
 sampling, no EOS, so both paths emit exactly ``new_tokens`` per request and
 outputs must be token-identical (asserted).
 
+Besides aggregate tok/s, a second *instrumented* pass (per-step device sync,
+excluded from the throughput timing) records per-step decode latency
+percentiles and the prefill/decode wall-time split, so the JSON shows the
+latency distribution a request actually experiences, not just the mean.
+
 Emits BENCH_serving.json:
   {"results": [{"concurrency": N, "baseline_tok_s": ..., "continuous_tok_s":
-   ..., "speedup": ...}, ...], "outputs_match": true}
+   ..., "speedup": ..., "decode_p50_ms": ..., "decode_p95_ms": ...,
+   "prefill_frac": ...}, ...], "outputs_match": true}
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py
 """
@@ -27,6 +33,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
                            ServeEngine)
+from repro.serving.request import SamplingParams
 
 CFG = ModelConfig(name="bench", d_model=128, n_layers=2, n_heads=4,
                   n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
@@ -48,6 +55,40 @@ def _continuous(params, prompts, gen, max_len, max_slots):
     out = np.asarray(eng.generate(np.stack(prompts), gen))
     eng.pool_host.check_invariants()
     return out
+
+
+def _continuous_instrumented(params, prompts, gen, max_len, max_slots):
+    """Per-step latency profile of the continuous engine: syncs the device
+    after every ``step()`` (so each step's wall time is real, at the cost of
+    the pipelining the throughput pass keeps) and splits steps that admitted
+    a prefill from pure decode steps."""
+    eng = ContinuousBatchingEngine(
+        CFG, params, max_slots=max_slots, page_size=8, max_len=max_len)
+    for i, p in enumerate(prompts):
+        eng.add_request(p, SamplingParams(
+            max_new_tokens=gen.max_new_tokens, temperature=gen.temperature,
+            eos_id=gen.eos_id, seed=gen.seed + i))
+    decode_ms, prefill_ms = [], 0.0
+    while eng.has_work():
+        pt0 = eng.stats["prefill_tokens"]
+        t0 = time.perf_counter()
+        eng.step()
+        jax.block_until_ready(eng._tok)
+        dt = (time.perf_counter() - t0) * 1e3
+        if eng.stats["prefill_tokens"] > pt0:
+            prefill_ms += dt
+        else:
+            decode_ms.append(dt)
+    total = prefill_ms + sum(decode_ms)
+    if not decode_ms:  # degenerate 1-token runs: every step admitted
+        decode_ms = [0.0]
+    return {
+        "decode_p50_ms": float(np.percentile(decode_ms, 50)),
+        "decode_p95_ms": float(np.percentile(decode_ms, 95)),
+        "prefill_ms": prefill_ms,
+        "decode_ms": sum(decode_ms),
+        "prefill_frac": prefill_ms / total if total else 0.0,
+    }
 
 
 def run(concurrencies=(1, 2, 4, 8), prompt_len=16, new_tokens=32):
@@ -76,16 +117,21 @@ def run(concurrencies=(1, 2, 4, 8), prompt_len=16, new_tokens=32):
         match = bool(np.array_equal(base_out, cont_out))
         all_match &= match
         toks = n * new_tokens
+        lat = _continuous_instrumented(params, prompts, gen, max_len, n)
         results.append({
             "concurrency": n,
             "baseline_tok_s": toks / t_base,
             "continuous_tok_s": toks / t_cont,
             "speedup": t_base / t_cont,
             "outputs_match": match,
+            **lat,
         })
         print(f"concurrency={n}: baseline={toks / t_base:7.1f} tok/s  "
               f"continuous={toks / t_cont:7.1f} tok/s  "
-              f"speedup={t_base / t_cont:5.2f}x  match={match}")
+              f"speedup={t_base / t_cont:5.2f}x  match={match}  "
+              f"p50={lat['decode_p50_ms']:.1f}ms "
+              f"p95={lat['decode_p95_ms']:.1f}ms "
+              f"prefill={lat['prefill_frac'] * 100:.0f}%")
     return results, all_match
 
 

@@ -35,6 +35,10 @@ def main():
                     help="decode attention via the Pallas paged kernel")
     ap.add_argument("--engine", choices=["continuous", "legacy"],
                     default="continuous")
+    ap.add_argument("--quantize", choices=["int8", "int4"], default=None,
+                    help="per-block quantized Monarch factors at load")
+    ap.add_argument("--fuse", action="store_true",
+                    help="fuse QKV / gate-up projections at load")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -55,19 +59,37 @@ def main():
         print("serve OK")
         return
 
+    from repro.core.quant import BITS_BY_NAME
+
+    wbits = BITS_BY_NAME.get(args.quantize, 8)
     cost = None
     if args.cost_model == "cim":
-        cost = CIMCostModel(cfg, strategy="sparse", seq_len=128)
+        cost = CIMCostModel(cfg, strategy="sparse", seq_len=128,
+                            weight_bits=wbits, fused_proj=args.fuse)
         print(f"CIM cost model: {cost.per_token_ns:.0f} ns/token, "
-              f"{cost.per_token_nj:.0f} nJ/token (sparse mapping)")
-    elif args.cost_model == "hbm":
-        cost = HBMCostModel.from_model_config(cfg)
+              f"{cost.per_token_nj:.0f} nJ/token (sparse mapping, "
+              f"{wbits}-bit cells)")
 
     engine = ContinuousBatchingEngine(
         cfg, params, max_slots=args.max_slots, page_size=args.page_size,
         max_len=64, cost_model=cost,
         scheduler_cfg=SchedulerConfig(max_prefill_tokens=64),
-        use_paged_kernel=args.paged_kernel)
+        use_paged_kernel=args.paged_kernel,
+        quantize=args.quantize, fuse_projections=args.fuse)
+    if args.cost_model == "hbm":
+        # price weight traffic by the tree the engine actually serves
+        # (post fuse/quantize), not the fp32 default
+        engine.scheduler.cost_model = HBMCostModel.from_params(
+            cfg, engine.params)
+    if args.quantize or args.fuse:
+        from repro.core.quant import tree_weight_bytes
+
+        before, after = map(tree_weight_bytes, (params, engine.params))
+        print(f"decode fast path: quantize={args.quantize} fuse={args.fuse} "
+              f"(weights {before / 1e6:.1f} -> {after / 1e6:.1f} MB)")
+        if args.quantize and after == before:
+            print("  note: no Monarch factors in this tree — dense weights "
+                  "pass through unquantized")
 
     rng = np.random.default_rng(1)
     finished = []

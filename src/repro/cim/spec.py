@@ -59,6 +59,22 @@ TABLE_I = TechCosts()
 # Paper-published per-mapping SAR ADC resolutions (Sec. IV-B):
 PAPER_ADC_BITS = {"linear": 8, "sparse": 5, "dense": 3}
 
+# Per-block scale <-> per-array ADC range correspondence
+# ------------------------------------------------------
+# The software quantizer (``repro.core.quant``) keeps ONE fp32 scale per
+# diagonal Monarch block.  On the CIM substrate each 256x256 array hosts
+# exactly one such block (SparseMap/DenseMap, Sec. III-B), so the per-block
+# scale is the digital twin of that array's ADC full-scale range: the
+# bitline currents are converted relative to the block's max conductance,
+# and the column sums are re-scaled by the block scale in the periphery —
+# exactly the ``wq.astype(f32) * scale`` dequant the Pallas kernels run in
+# VMEM.  Lower weight precision (int4 cells) shrinks the output dynamic
+# range, so a conversion never needs more resolution than the cell width:
+# ``CIMConfig.weight_bits`` clamps ``adc_bits`` accordingly, which is the
+# same resolution/latency/energy trade the Fig. 8 ADC-sharing DSE
+# (benchmarks/fig8_adc_dse.py) sweeps explicitly via ``adc_bits_override``
+# — the DSE explores the knob, the weight width bounds it.
+
 
 @dataclasses.dataclass(frozen=True)
 class CIMConfig:
@@ -86,6 +102,8 @@ class CIMConfig:
     tech: TechCosts = TABLE_I
 
     adc_bits_override: int | None = None  # force a resolution (DSE sweeps)
+    weight_bits: int = 8            # cell precision; caps adc_bits (see the
+                                    # per-block-scale <-> ADC note above)
 
     def adc_bits(self, mapping: str, active_rows: int) -> int:
         """Required ADC resolution.
@@ -94,13 +112,15 @@ class CIMConfig:
         "analytical": ceil(log2(active rows summing into one bitline)) —
         the physically-derived bound; differs from the paper for DenseMap
         (5 vs 3 at b=32), recorded as a reproduction ambiguity (DESIGN.md 8.1).
+        Either policy is clamped to ``weight_bits``: int4 cells never need
+        finer than 4-bit conversions.
         """
         if self.adc_bits_override is not None:
             return self.adc_bits_override
         if self.adc_policy == "paper":
-            return PAPER_ADC_BITS[mapping]
+            return min(PAPER_ADC_BITS[mapping], self.weight_bits)
         bits = max(1, (max(active_rows, 1) - 1).bit_length())
-        return min(bits, 8)
+        return min(bits, 8, self.weight_bits)
 
 
 # GPU reference points quoted by the paper (Sec. IV-B), reported for context

@@ -154,29 +154,51 @@ def bart_large() -> ModelDesc:
     )
 
 
-def decode_workload(cfg, seq_len: int = 512) -> ModelDesc:
+def decode_workload(cfg, seq_len: int = 512,
+                    fused_proj: bool = False) -> ModelDesc:
     """ModelDesc for one decode step of a ``repro.models.config.ModelConfig``
     attention stack — the workload the serving scheduler's CIM cost model
     pushes through ``simulate`` to price a batch's per-token latency/energy.
 
     Covers GQA projections and (gated) FFN matmuls; MoE / SSM stacks fall
     back to their dense-FFN equivalent for costing purposes.
+    ``fused_proj`` prices the decode fast path (models/fuse.py): Q/K/V and
+    FFN up/gate are single widened matmuls, so each stage is one
+    co-activated array group instead of three, matching what the runtime
+    actually dispatches.
     """
     d, hd = cfg.d_model, cfg.hd
     h, kv, ff = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
     gated = cfg.ffn_type in ("swiglu", "geglu")
-    mm = [
-        MatmulDesc("wq", d, h * hd, "x_attn"),
-        MatmulDesc("wk", d, kv * hd, "x_attn"),
-        MatmulDesc("wv", d, kv * hd, "x_attn"),
-        MatmulDesc("wo", h * hd, d, "attn_out"),
-        MatmulDesc("ffn1", d, ff, "x_ffn"),
-        MatmulDesc("ffn2", ff, d, "ffn_mid"),
-    ]
-    stages = [("wq", "wk", "wv"), ("wo",), ("ffn1",), ("ffn2",)]
-    if gated:
-        mm.append(MatmulDesc("ffng", d, ff, "x_ffn"))
-        stages = [("wq", "wk", "wv"), ("wo",), ("ffn1", "ffng"), ("ffn2",)]
+    if fused_proj:
+        up = MatmulDesc("ffn1g" if gated else "ffn1", d,
+                        2 * ff if gated else ff, "x_ffn")
+        if h == kv:  # full QKV fusion (models/fuse.py)
+            attn_in = [MatmulDesc("wqkv", d, (h + 2 * kv) * hd, "x_attn")]
+        else:        # GQA: the runtime keeps wq separate and fuses K/V only
+            attn_in = [MatmulDesc("wq", d, h * hd, "x_attn"),
+                       MatmulDesc("wkv", d, 2 * kv * hd, "x_attn")]
+        mm = attn_in + [
+            MatmulDesc("wo", h * hd, d, "attn_out"),
+            up,
+            MatmulDesc("ffn2", ff, d, "ffn_mid"),
+        ]
+        stages = [tuple(m.name for m in attn_in), ("wo",), (up.name,),
+                  ("ffn2",)]
+    else:
+        mm = [
+            MatmulDesc("wq", d, h * hd, "x_attn"),
+            MatmulDesc("wk", d, kv * hd, "x_attn"),
+            MatmulDesc("wv", d, kv * hd, "x_attn"),
+            MatmulDesc("wo", h * hd, d, "attn_out"),
+            MatmulDesc("ffn1", d, ff, "x_ffn"),
+            MatmulDesc("ffn2", ff, d, "ffn_mid"),
+        ]
+        stages = [("wq", "wk", "wv"), ("wo",), ("ffn1",), ("ffn2",)]
+        if gated:
+            mm.append(MatmulDesc("ffng", d, ff, "x_ffn"))
+            stages = [("wq", "wk", "wv"), ("wo",), ("ffn1", "ffng"),
+                      ("ffn2",)]
     layer = LayerDesc(
         matmuls=tuple(mm),
         stages=tuple(stages),

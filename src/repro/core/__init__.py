@@ -22,7 +22,14 @@ from repro.core.d2s import (  # noqa: F401
 from repro.core.linear import (  # noqa: F401
     MonarchSpec,
     is_monarch,
+    is_quantized,
     linear_apply,
     linear_init,
     linear_out_dim,
+)
+from repro.core.quant import (  # noqa: F401
+    dequantize_monarch,
+    quant_error_stats,
+    quantize_monarch,
+    quantize_tree,
 )

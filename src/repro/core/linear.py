@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import monarch as mn
+from repro.core import quant as qn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +58,12 @@ def is_monarch(params: dict[str, Any]) -> bool:
     return "L" in params and "R" in params
 
 
+def is_quantized(params: dict[str, Any]) -> bool:
+    """Quantized Monarch container (core.quant): int8/int4 factors +
+    per-block scales."""
+    return qn.is_quantized(params)
+
+
 def linear_apply(
     params: dict[str, Any],
     x: jax.Array,
@@ -70,7 +77,17 @@ def linear_apply(
         if "b" in params:
             inner["b"] = params["b"]
         return linear_apply(inner, x, precision=precision, backend=backend)
-    if is_monarch(params):
+    if qn.is_quantized(params):
+        if backend == "pallas":
+            from repro.kernels import ops as kops  # lazy: avoid cycle
+
+            y = kops.monarch_mm_q(x, params["Lq"], params["Ls"],
+                                  params["Rq"], params["Rs"])
+        else:
+            k = params["Ls"].shape[-3]
+            deq = qn.dequantize_monarch(params, k, x.shape[-1] // k)
+            y = mn.monarch_multiply(x, deq["L"], deq["R"], precision=precision)
+    elif is_monarch(params):
         if backend == "pallas":
             from repro.kernels import ops as kops  # lazy: avoid cycle
 
@@ -85,6 +102,8 @@ def linear_apply(
 
 
 def linear_out_dim(params: dict[str, Any]) -> int:
+    if qn.is_quantized(params):
+        return qn.quantized_out_dim(params)
     if is_monarch(params):
         q, s, _ = params["R"].shape
         return q * s
@@ -100,6 +119,7 @@ __all__ = [
     "linear_init",
     "linear_apply",
     "is_monarch",
+    "is_quantized",
     "linear_out_dim",
     "linear_param_count",
 ]

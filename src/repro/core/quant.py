@@ -1,0 +1,183 @@
+"""Per-block symmetric quantization of Monarch block-diagonal factors.
+
+The decode path is memory-bound: every token step re-reads each factor of
+every projection of every layer, so bytes-per-weight is the lever (the
+paper's weights stay *resident and low-precision* in the CIM arrays).  This
+module is the jax_pallas analogue: int8 (and packed int4) factor values with
+**one fp32 scale per diagonal block** — the software twin of the per-crossbar
+ADC range in ``repro.cim.spec`` (each 256x256 array holds one block and its
+ADC full-scale is calibrated to that block's max conductance; see the
+"per-block scale <-> ADC precision" note in ``cim/spec.py``).
+
+Quantized parameter container (dict-shaped, like every param tree here):
+
+    {"Lq": int8 (..., k, q, p[/2]),  "Ls": f32 (..., k, 1, 1),
+     "Rq": int8 (..., q, s, k[/2]),  "Rs": f32 (..., q, 1, 1)}
+
+Leading axes (e.g. a stacked ``num_layers``) pass straight through: scales
+are always per *diagonal block*, i.e. per ``shape[:-2]`` slice.  int4 packs
+two values per byte along the **contraction** axis (last axis of both
+factors), so the unpacked shape is recovered statically from the scale
+shapes plus the activation width — no runtime metadata needed, and the
+container stays a plain pytree of arrays for jit/scan/donation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+QMAX = {8: 127, 4: 7}
+BITS_BY_NAME = {"int8": 8, "int4": 4}  # engine/CLI mode names -> bit widths
+
+
+def _qmax(bits: int) -> int:
+    try:
+        return QMAX[bits]
+    except KeyError:
+        raise ValueError(f"unsupported quantization bits: {bits}") from None
+
+
+def block_scales(w: jax.Array, bits: int = 8) -> jax.Array:
+    """Per-block symmetric scales: one fp32 scale per ``w[..., i, :, :]``
+    diagonal block (shape ``w.shape[:-2] + (1, 1)``)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=(-2, -1), keepdims=True)
+    return jnp.where(amax > 0, amax / _qmax(bits), 1.0)
+
+
+def pack_int4(v: jax.Array) -> jax.Array:
+    """Pack int8-held int4 values ([-7, 7]) pairwise along the last axis:
+    byte = (odd & 0xF) << 4 | (even & 0xF).  Last axis must be even."""
+    if v.shape[-1] % 2:
+        raise ValueError(f"int4 packing needs an even last axis, got {v.shape}")
+    vi = v.astype(jnp.int32)
+    lo = vi[..., 0::2] & 0xF
+    hi = vi[..., 1::2] & 0xF
+    return ((hi << 4) | lo).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`: (..., n) int8 -> (..., 2n) int8."""
+    b = packed.astype(jnp.int32)
+    lo = ((b & 0xF) ^ 8) - 8           # sign-extend the low nibble
+    hi = b >> 4                         # arithmetic shift sign-extends the high
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], 2 * packed.shape[-1]).astype(jnp.int8)
+
+
+def quantize_factor(w: jax.Array, bits: int = 8
+                    ) -> tuple[jax.Array, jax.Array]:
+    """One block-diagonal factor -> (int8 values, per-block fp32 scales).
+
+    Round-to-nearest-even (``jnp.round``), symmetric range ±QMAX[bits].
+    For ``bits == 4`` the values are nibble-packed along the last axis.
+    """
+    scale = block_scales(w, bits)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                 -_qmax(bits), _qmax(bits)).astype(jnp.int8)
+    if bits == 4:
+        q = pack_int4(q)
+    return q, scale
+
+
+def dequantize_factor(q: jax.Array, scale: jax.Array, *,
+                      unpacked_dim: Optional[int] = None) -> jax.Array:
+    """(values, scales) -> fp32 factor.  ``unpacked_dim`` is the true last-axis
+    width; when it differs from ``q.shape[-1]`` the values are int4-packed."""
+    if unpacked_dim is not None and unpacked_dim != q.shape[-1]:
+        q = unpack_int4(q)[..., :unpacked_dim]
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_monarch(params: dict[str, Any], bits: int = 8) -> dict[str, Any]:
+    """{"L", "R"(, "b")} -> {"Lq", "Ls", "Rq", "Rs"(, "b")}."""
+    Lq, Ls = quantize_factor(params["L"], bits)
+    Rq, Rs = quantize_factor(params["R"], bits)
+    out: dict[str, Any] = {"Lq": Lq, "Ls": Ls, "Rq": Rq, "Rs": Rs}
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def dequantize_monarch(params: dict[str, Any], k: int, p: int
+                       ) -> dict[str, Any]:
+    """Inverse container transform; (k, p) disambiguates int4 packing."""
+    out: dict[str, Any] = {
+        "L": dequantize_factor(params["Lq"], params["Ls"], unpacked_dim=p),
+        "R": dequantize_factor(params["Rq"], params["Rs"], unpacked_dim=k),
+    }
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def is_quantized(params: Any) -> bool:
+    return isinstance(params, dict) and "Lq" in params and "Rq" in params
+
+
+def quant_bits(params: dict[str, Any], din: int) -> int:
+    """8 or 4, recovered from static shapes (packed iff the stored
+    contraction axis is half the true one)."""
+    k = params["Ls"].shape[-3]
+    p = din // k
+    return 4 if params["Lq"].shape[-1] != p else 8
+
+
+def quantized_out_dim(params: dict[str, Any]) -> int:
+    q = params["Rs"].shape[-3]
+    s = params["Rq"].shape[-2]
+    return q * s
+
+
+def quant_error_stats(w: jax.Array, bits: int = 8) -> dict[str, float]:
+    """Reconstruction error of per-block quantization: max abs error, max
+    per-block relative error (vs the block's absmax) and Frobenius relative
+    error.  The per-block bound is ``0.5 / QMAX[bits]`` of the block absmax
+    (half a quantization step), asserted by the property tests."""
+    q, scale = quantize_factor(w, bits)
+    deq = dequantize_factor(q, scale, unpacked_dim=w.shape[-1])
+    err = jnp.abs(deq - w.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=(-2, -1),
+                   keepdims=True)
+    rel = jnp.where(amax > 0, err / amax, 0.0)
+    wf = w.astype(jnp.float32)
+    fro = jnp.linalg.norm((deq - wf).reshape(-1)) / jnp.maximum(
+        jnp.linalg.norm(wf.reshape(-1)), 1e-30)
+    return {
+        "max_abs_err": float(jnp.max(err)),
+        "max_block_rel_err": float(jnp.max(rel)),
+        "fro_rel_err": float(fro),
+        "bound_block_rel": 0.5 / _qmax(bits),
+    }
+
+
+def quantize_tree(params: Any, bits: int = 8) -> Any:
+    """Recursively replace every Monarch ``{"L", "R"}`` leaf-dict in a model
+    parameter tree with its quantized container.  Stacked (vmap-initialized)
+    factor arrays quantize per (layer, block) since scales follow the leading
+    axes.  Dense weights, norms, embeddings and biases pass through
+    untouched — the paper keeps them off the transformed arrays."""
+    if isinstance(params, dict):
+        if "L" in params and "R" in params:
+            return quantize_monarch(params, bits)
+        return {k: quantize_tree(v, bits) for k, v in params.items()}
+    return params
+
+
+def tree_weight_bytes(params: Any) -> int:
+    """Total bytes of every array leaf (the decode step's weight traffic)."""
+    return sum(leaf.dtype.itemsize * leaf.size
+               for leaf in jax.tree_util.tree_leaves(params)
+               if hasattr(leaf, "dtype"))
+
+
+__all__ = [
+    "QMAX", "BITS_BY_NAME", "block_scales", "pack_int4", "unpack_int4",
+    "quantize_factor", "dequantize_factor",
+    "quantize_monarch", "dequantize_monarch",
+    "is_quantized", "quant_bits", "quantized_out_dim",
+    "quant_error_stats", "quantize_tree", "tree_weight_bytes",
+]

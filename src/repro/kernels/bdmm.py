@@ -22,6 +22,17 @@ from jax.experimental import pallas as pl
 DEFAULT_TILE_T = 256
 
 
+def _dequant_block(w, scale, p: int):
+    """int8 (q, p) or nibble-packed int4 (q, p//2) -> fp32 (q, p) in VMEM:
+    ``core.quant.dequantize_factor`` verbatim (plain jnp ops, VMEM-safe), so
+    the kernels, the einsum path and the oracles share ONE rounding chain —
+    the kernel-side analogue of applying the block's ADC full-scale range
+    (cim/spec.py)."""
+    from repro.core.quant import dequantize_factor
+
+    return dequantize_factor(w, scale, unpacked_dim=p)
+
+
 def _bdmm_kernel(x_ref, w_ref, o_ref):
     # x: (bT, 1, p), w: (1, q, p), o: (bT, 1, q)
     x = x_ref[:, 0, :]
@@ -60,4 +71,50 @@ def bdmm(x: jax.Array, w: jax.Array, *, tile_t: int = DEFAULT_TILE_T,
     return out[:T] if pad else out
 
 
-__all__ = ["bdmm"]
+def _bdmm_q_kernel(x_ref, w_ref, s_ref, o_ref, *, p: int):
+    # x: (bT, 1, p); w: (1, q, p[/2]) int8; s: (1, 1, 1) fp32 per-block scale
+    x = x_ref[:, 0, :]
+    w = _dequant_block(w_ref[0], s_ref[0, 0, 0], p)
+    acc = jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[:, 0, :] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "interpret"))
+def bdmm_q(x: jax.Array, wq: jax.Array, scale: jax.Array, *,
+           tile_t: int = DEFAULT_TILE_T, interpret: bool = False) -> jax.Array:
+    """Quantized block-diagonal matmul with in-kernel dequantization.
+
+    x: (T, k, p); wq: (k, q, p) int8 or (k, q, p//2) nibble-packed int4;
+    scale: (k, 1, 1) fp32 per-block -> (T, k, q).  The int8/int4 weights are
+    what streams HBM -> VMEM (the memory-bound decode bytes); dequantization
+    happens in VMEM and the MXU accumulates in fp32.
+    """
+    T, k, p = x.shape
+    k2, q, pp = wq.shape
+    assert k2 == k and pp in (p, p // 2), (x.shape, wq.shape)
+    assert scale.shape == (k, 1, 1), scale.shape
+    bT = min(tile_t, T)
+    pad = (-T) % bT
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    out = pl.pallas_call(
+        functools.partial(_bdmm_q_kernel, p=p),
+        grid=(k, Tp // bT),
+        in_specs=[
+            pl.BlockSpec((bT, 1, p), lambda j, t: (t, j, 0)),
+            pl.BlockSpec((1, q, pp), lambda j, t: (j, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda j, t: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bT, 1, q), lambda j, t: (t, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, k, q), x.dtype),
+        interpret=interpret,
+    )(x, wq, scale)
+    return out[:T] if pad else out
+
+
+__all__ = ["bdmm", "bdmm_q"]

@@ -83,10 +83,92 @@ def monarch_fused(x: jax.Array, L: jax.Array, R: jax.Array, *,
     return out[:T] if pad else out
 
 
-def fused_fits(L_shape, R_shape, dtype_bytes: int = 4) -> bool:
+def _monarch_q_kernel(x_ref, l_ref, ls_ref, r_ref, rs_ref, o_ref,
+                      *, p: int, k: int):
+    from repro.kernels.bdmm import _dequant_block
+
+    # int8/int4 factors + per-block scales dequantize in VMEM; both stages
+    # and the folded permutation then run exactly as the fp32 kernel, with
+    # fp32 MXU accumulation.  Bytes moved HBM->VMEM per weight: 1 (int8) or
+    # 0.5 (int4) instead of 4.
+    L = _dequant_block(l_ref[...], ls_ref[...], p)     # (k, q, p) fp32
+    R = _dequant_block(r_ref[...], rs_ref[...], k)     # (q, s, k) fp32
+    q = L.shape[1]
+    s = R.shape[1]
+    bT = x_ref.shape[0]
+    x = x_ref[...].reshape(bT, k, p)
+    u = jax.lax.dot_general(
+        x, L,
+        dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    ut = jnp.transpose(u, (2, 1, 0)).astype(x.dtype)
+    y = jax.lax.dot_general(
+        ut, R,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jnp.transpose(y, (1, 0, 2)).reshape(bT, q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "interpret"))
+def monarch_fused_q(x: jax.Array, Lq: jax.Array, Ls: jax.Array,
+                    Rq: jax.Array, Rs: jax.Array, *,
+                    tile_t: int = DEFAULT_TILE_T,
+                    interpret: bool = False) -> jax.Array:
+    """Fused two-stage Monarch matmul over quantized factors.
+
+    x: (T, din); Lq: (k, q, p[/2]) int8; Ls: (k, 1, 1) fp32;
+    Rq: (q, s, k[/2]) int8; Rs: (q, 1, 1) fp32 -> (T, q*s).
+    """
+    T, din = x.shape
+    k = Ls.shape[0]
+    q = Rs.shape[0]
+    p = din // k
+    s = Rq.shape[1]
+    assert k * p == din and Lq.shape[:2] == (k, q), (x.shape, Lq.shape)
+    assert Lq.shape[2] in (p, p // 2) and Rq.shape[2] in (k, k // 2), (
+        Lq.shape, Rq.shape)
+    bT = min(tile_t, T)
+    pad = (-T) % bT
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = T + pad
+    out = pl.pallas_call(
+        functools.partial(_monarch_q_kernel, p=p, k=k),
+        grid=(Tp // bT,),
+        in_specs=[
+            pl.BlockSpec((bT, din), lambda t: (t, 0)),
+            pl.BlockSpec(Lq.shape, lambda t: (0, 0, 0)),
+            pl.BlockSpec(Ls.shape, lambda t: (0, 0, 0)),
+            pl.BlockSpec(Rq.shape, lambda t: (0, 0, 0)),
+            pl.BlockSpec(Rs.shape, lambda t: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bT, q * s), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, q * s), x.dtype),
+        interpret=interpret,
+    )(x, Lq, Ls, Rq, Rs)
+    return out[:T] if pad else out
+
+
+def fused_fits(L_shape, R_shape, dtype_bytes: float = 4,
+               scale_bytes: int = 0, dequant_bytes: float = 0) -> bool:
+    """Do both factors fit the per-core VMEM weight budget?
+
+    ``dtype_bytes`` is the **stored weight** width (4 fp32, 2 bf16, 1 int8,
+    0.5 packed int4) — what the BlockSpecs actually pin in VMEM — so fusion
+    kicks in for e.g. bf16-stored models whose fp32 factors would spill.
+    For the quantized kernels, ``dequant_bytes`` must count the fp32
+    temporaries ``_monarch_q_kernel`` materializes when it dequantizes both
+    factors in VMEM (4 bytes/weight on top of the pinned int8/int4 blocks),
+    and ``scale_bytes`` the per-block scale vectors — otherwise the check
+    would admit pairs whose true working set is ~4x the budget.
+    """
     k, q, p = L_shape
     _, s, _ = R_shape
-    return (k * q * p + q * s * k) * dtype_bytes <= VMEM_BUDGET_BYTES
+    weights = (k * q * p + q * s * k) * (dtype_bytes + dequant_bytes)
+    return weights + scale_bytes <= VMEM_BUDGET_BYTES
 
 
-__all__ = ["monarch_fused", "fused_fits", "VMEM_BUDGET_BYTES"]
+__all__ = ["monarch_fused", "monarch_fused_q", "fused_fits",
+           "VMEM_BUDGET_BYTES"]

@@ -4,7 +4,14 @@
 ``MonarchSpec.backend == "pallas"``: it flattens leading batch dims, picks
 the fused two-stage kernel when both factors fit the VMEM budget (the
 DenseMap-analogue fast path), and otherwise runs the two ``bdmm`` stages
-with the folded permutation in between.
+with the folded permutation in between.  ``monarch_mm_q`` is the same
+dispatch over int8 / packed-int4 factors with per-block scales
+(``repro.core.quant``), dequantized inside the kernels.
+
+Backend/interpret and the VMEM-fit decision are resolved ONCE per
+(shape, dtype) through a small ``lru_cache`` dispatch table — the decode hot
+loop calls these per projection per token step, so none of that should be
+recomputed per call.
 
 On CPU (this container) the kernels execute with ``interpret=True``; on TPU
 the same BlockSpecs compile through Mosaic.
@@ -12,15 +19,31 @@ the same BlockSpecs compile through Mosaic.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bdmm import bdmm
-from repro.kernels.monarch import fused_fits, monarch_fused
+from repro.kernels.bdmm import bdmm, bdmm_q
+from repro.kernels.monarch import fused_fits, monarch_fused, monarch_fused_q
 
 
+@functools.lru_cache(maxsize=None)
 def _interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+@functools.lru_cache(maxsize=None)
+def _dispatch(l_shape: tuple, r_shape: tuple, weight_bytes: float,
+              scale_bytes: int = 0,
+              dequant_bytes: float = 0) -> tuple[bool, bool]:
+    """(interpret, use_fused) for one (logical factor shapes, weight width)
+    key.  ``l_shape``/``r_shape`` are the UNPACKED shapes; ``weight_bytes``
+    is the stored width (4/2 float, 1 int8, 0.5 packed int4) and
+    ``dequant_bytes`` the in-kernel fp32 dequant temporaries of the
+    quantized path."""
+    return _interpret(), fused_fits(l_shape, r_shape, weight_bytes,
+                                    scale_bytes, dequant_bytes)
 
 
 def monarch_mm(x: jax.Array, L: jax.Array, R: jax.Array) -> jax.Array:
@@ -29,13 +52,38 @@ def monarch_mm(x: jax.Array, L: jax.Array, R: jax.Array) -> jax.Array:
     k, q, p = L.shape
     _, s, _ = R.shape
     xt = x.reshape(-1, din)
-    interp = _interpret()
-    if fused_fits(L.shape, R.shape, dtype_bytes=x.dtype.itemsize):
+    interp, fused = _dispatch(L.shape, R.shape, L.dtype.itemsize)
+    if fused:
         y = monarch_fused(xt, L, R, interpret=interp)
     else:  # staged: two bdmm calls + folded permutation (layout change)
         u = bdmm(xt.reshape(-1, k, p), L, interpret=interp)   # (T, k, q)
         ut = jnp.swapaxes(u, -1, -2)                          # (T, q, k)
         y = bdmm(ut, R, interpret=interp).reshape(-1, q * s)  # (T, q, s)
+    return y.reshape(*batch, q * s)
+
+
+def monarch_mm_q(x: jax.Array, Lq: jax.Array, Ls: jax.Array,
+                 Rq: jax.Array, Rs: jax.Array) -> jax.Array:
+    """Quantized Monarch matmul: int8/int4 factors + per-block scales,
+    dequantized in VMEM (fp32 accumulate).  x: (..., k*p) -> (..., q*s)."""
+    *batch, din = x.shape
+    k = Ls.shape[0]
+    q = Rs.shape[0]
+    p = din // k
+    s = Rq.shape[1]
+    packed = Lq.shape[-1] != p
+    weight_bytes = 0.5 if packed else 1
+    xt = x.reshape(-1, din)
+    # dequant_bytes=4: the fused kernel materializes fp32 copies of both
+    # factors in VMEM next to the pinned int8/int4 blocks
+    interp, fused = _dispatch((k, q, p), (q, s, k), weight_bytes,
+                              scale_bytes=4 * (k + q), dequant_bytes=4)
+    if fused:
+        y = monarch_fused_q(xt, Lq, Ls, Rq, Rs, interpret=interp)
+    else:
+        u = bdmm_q(xt.reshape(-1, k, p), Lq, Ls, interpret=interp)
+        ut = jnp.swapaxes(u, -1, -2)
+        y = bdmm_q(ut, Rq, Rs, interpret=interp).reshape(-1, q * s)
     return y.reshape(*batch, q * s)
 
 
@@ -46,4 +94,9 @@ def bdmm_mm(x: jax.Array, w: jax.Array) -> jax.Array:
     return y.reshape(*batch, k, w.shape[1])
 
 
-__all__ = ["monarch_mm", "bdmm_mm"]
+def dispatch_cache_info():
+    """Introspection for tests/benchmarks: the dispatch table's hit stats."""
+    return _dispatch.cache_info()
+
+
+__all__ = ["monarch_mm", "monarch_mm_q", "bdmm_mm", "dispatch_cache_info"]

@@ -23,6 +23,33 @@ def monarch_ref(x: jax.Array, L: jax.Array, R: jax.Array) -> jax.Array:
     return y.reshape(T, q * s)
 
 
+def _dequant_ref(wq: jax.Array, scale: jax.Array, dim: int) -> jax.Array:
+    """Dequantize-then-einsum oracle's dequant half: ``core.quant``'s own
+    dequantize (int -> f32 cast, one f32 multiply) — the single rounding
+    chain shared with the kernels."""
+    from repro.core.quant import dequantize_factor
+
+    return dequantize_factor(wq, scale, unpacked_dim=dim)
+
+
+def bdmm_q_ref(x: jax.Array, wq: jax.Array, scale: jax.Array) -> jax.Array:
+    """Oracle for the quantized bdmm kernel: dequantize, then the fp32
+    einsum.  x: (T, k, p); wq: (k, q, p[/2]) int8; scale: (k, 1, 1)."""
+    w = _dequant_ref(wq, scale, x.shape[-1])
+    return jnp.einsum("tkp,kqp->tkq", x.astype(jnp.float32), w)
+
+
+def monarch_q_ref(x: jax.Array, Lq: jax.Array, Ls: jax.Array,
+                  Rq: jax.Array, Rs: jax.Array) -> jax.Array:
+    """Oracle for the quantized fused Monarch kernel: dequantize both factors,
+    then the fp32 folded product."""
+    k = Ls.shape[-3]
+    p = x.shape[-1] // k
+    L = _dequant_ref(Lq, Ls, p)
+    R = _dequant_ref(Rq, Rs, k)
+    return monarch_ref(x.astype(jnp.float32), L, R)
+
+
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         page_table: jax.Array, lengths: jax.Array,
                         window) -> jax.Array:
@@ -49,4 +76,5 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
-__all__ = ["bdmm_ref", "monarch_ref", "paged_attention_ref"]
+__all__ = ["bdmm_ref", "monarch_ref", "bdmm_q_ref", "monarch_q_ref",
+           "paged_attention_ref"]

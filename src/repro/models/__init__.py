@@ -1,6 +1,11 @@
 """Model zoo: dense/GQA, local-global, MoE, Mamba2/SSD, hybrid, enc-dec."""
 
 from repro.models.config import ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from repro.models.decode_path import (  # noqa: F401
+    decode_step_layerwise,
+    prepare_decode_params,
+)
+from repro.models.fuse import fuse_model  # noqa: F401
 from repro.models.transformer import (  # noqa: F401
     decode_step,
     forward,

@@ -97,6 +97,11 @@ class ModelConfig:
 
     # paper technique
     monarch: MonarchSpec = dataclasses.field(default_factory=MonarchSpec)
+    # decode fast path: initialize Q/K/V (and gated-FFN up/gate) as single
+    # widened projections so each weight visit amortizes more work (the CIM
+    # co-activation analogue).  Existing checkpoints convert exactly via
+    # models/fuse.py:fuse_model without this flag.
+    fused_proj: bool = False
 
     # numerics
     dtype: str = "bfloat16"

@@ -1,0 +1,92 @@
+"""Decode fast-path preparation + the per-layer reference decode step.
+
+The serving decode step is memory-bound: every token re-reads every factor
+of every projection of every layer.  ``prepare_decode_params`` applies the
+two compression/fusion levers ONCE at load time:
+
+  1. projection fusion (``models/fuse.py``): Q/K/V and FFN up/gate collapse
+     into single widened Monarch matmuls — exact, fewer weight visits;
+  2. per-block int8/int4 quantization (``core/quant.py``): 4x/8x fewer
+     bytes per weight visit, dequantized inside the Pallas kernels.
+
+The prepared tree is layer-stacked (``(num_layers, k, q, p)`` factors, as
+``decoder_stack_init`` builds them), so ``transformer.decode_step`` /
+``paged_decode_step`` run the whole per-token step as ONE compiled
+``lax.scan`` loop over layers.
+
+``decode_step_layerwise`` is the *reference* per-layer path — a Python loop
+over unstacked layers, numerically identical to the scanned step.  It
+exists (a) as a parity oracle for the stacked step and (b) as the
+dispatch-chain baseline that ``benchmarks/decode_path.py`` measures the
+fast path against (the seed's shape: ``num_layers`` separate dispatch
+chains per token instead of one compiled loop).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as qn
+from repro.models import fuse as F
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def prepare_decode_params(params: Any, cfg: ModelConfig, *,
+                          fuse: bool = True,
+                          bits: Optional[int] = None) -> Any:
+    """Convert a trained/initialized parameter tree into the decode
+    fast-path layout: fused projections, then (optionally) int8/int4
+    per-block quantized Monarch factors.  Exact for fusion; quantization
+    error is bounded per block (``quant.quant_error_stats``)."""
+    if fuse:
+        params = F.fuse_model(params)
+    if bits is not None:
+        params = qn.quantize_tree(params, bits)
+    return params
+
+
+def layer_slice(tree: Any, i: int) -> Any:
+    """Layer ``i``'s slice of a layer-stacked parameter or cache tree."""
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _restack(trees: list) -> Any:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def decode_step_layerwise(params: Any, tokens: jax.Array, cache: dict,
+                          cfg: ModelConfig, ) -> tuple[jax.Array, dict]:
+    """Per-layer (unscanned) twin of ``transformer.decode_step`` for attn
+    stacks: a Python loop slices each layer from the stacked tree and runs
+    it separately.  Same math, ``num_layers`` dispatch chains."""
+    assert cfg.layer_kind == "attn", "layerwise decode covers attn stacks"
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pos = cache["pos"]
+    x = L.embed(params["embedding"], tokens[:, None], cfg, dtype)
+    windows = T._layer_windows(cfg)
+    new_layers = []
+    for i in range(cfg.n_layers):
+        p_i = layer_slice(params["decoder"]["layers"], i)
+        c_i = layer_slice(cache["layers"], i)
+        x, nc, _ = T.attn_block_apply(
+            p_i, x, cfg, window=int(windows[i]), cache=c_i, pos=pos)
+        new_layers.append(nc)
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    logits = L.unembed(params["embedding"], x, cfg)
+    new_cache = {"layers": _restack(new_layers), "pos": pos + 1}
+    return logits[:, 0], new_cache
+
+
+def decode_weight_bytes(params: Any) -> int:
+    """Weight bytes the decode step streams per token step (the whole
+    decoder + head): the quantity the int8/int4 path compresses."""
+    return qn.tree_weight_bytes(params)
+
+
+__all__ = ["prepare_decode_params", "decode_step_layerwise", "layer_slice",
+           "decode_weight_bytes"]

@@ -1,0 +1,117 @@
+"""Projection fusion: Q/K/V (and MLP gate/up) as ONE widened Monarch matmul.
+
+Decode is memory-bound, so each weight visit should amortize as much work as
+possible (SparAMX's compressed-weight decode lever; the N:M digital-CIM
+co-design's fused-kernel rule).  Q, K and V all read the same layer input —
+on the CIM side they are co-activated arrays sharing one DAC stream
+(``cim/workload.py`` marks them with one ``input_id``); the jax analogue is
+one projection of output width ``q + k + v``.
+
+Fusion is **exact by construction** for Monarch factors with identical
+shapes: concatenating the L factors along the per-block output axis and the
+R factors along the block axis,
+
+    L_cat = concat([L_1..L_n], axis=-2)     (k, n*qm, p)
+    R_cat = concat([R_1..R_n], axis=-3)     (n*qm, s, k)
+
+yields a VALID Monarch pair whose composed map is exactly
+``concat([x @ M_1, ..., x @ M_n], axis=-1)`` — every per-block dot product
+is unchanged, so fp32 outputs are bitwise identical to the separate
+projections (asserted by tests/test_quant.py).  Dense weights concatenate
+along the output axis.  Negative axes make the same transform work on
+layer-stacked (vmap-initialized) parameter trees.
+
+GQA stacks (n_heads != n_kv_heads) have differently-shaped Q vs K/V
+factors; there K and V (always same shape) fuse into ``wkv`` and Q stays
+separate.  Quantization composes: fuse first, then ``quant.quantize_tree``
+— the fused factor quantizes with per-block scales like any other.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.linear import is_monarch
+
+
+def _fusable(parts: list[dict]) -> bool:
+    if any(not isinstance(p, dict) for p in parts):
+        return False
+    if any("b" in p for p in parts) != all("b" in p for p in parts):
+        return False
+    if all(is_monarch(p) for p in parts):
+        return (all(p["L"].shape == parts[0]["L"].shape for p in parts)
+                and all(p["R"].shape == parts[0]["R"].shape for p in parts))
+    if all("w" in p and not isinstance(p["w"], dict) for p in parts):
+        return all(p["w"].shape[-2] == parts[0]["w"].shape[-2] for p in parts)
+    return False
+
+
+def fuse_linears(parts: list[dict]) -> dict:
+    """Concatenate compatible linear params into one widened projection whose
+    output is ``concat([y_1, ..., y_n], axis=-1)`` exactly."""
+    if not _fusable(parts):
+        raise ValueError("projections are not fusable (shape/kind mismatch)")
+    if is_monarch(parts[0]):
+        out: dict[str, Any] = {
+            "L": jnp.concatenate([p["L"] for p in parts], axis=-2),
+            "R": jnp.concatenate([p["R"] for p in parts], axis=-3),
+        }
+    else:
+        out = {"w": jnp.concatenate([p["w"] for p in parts], axis=-1)}
+    if "b" in parts[0]:
+        out["b"] = jnp.concatenate([p["b"] for p in parts], axis=-1)
+    return out
+
+
+def fuse_attention(p: dict, allow_qkv: bool = True) -> dict:
+    """{wq, wk, wv, wo} -> {wqkv, wo} (full fusion) or {wq, wkv, wo} (GQA —
+    or cross-attention, where q reads a different stream than k/v and only
+    K/V may fuse).  Already-fused or unfusable dicts pass through."""
+    if "wqkv" in p or "wkv" in p or not all(
+            k in p for k in ("wq", "wk", "wv")):
+        return p
+    rest = {k: v for k, v in p.items() if k not in ("wq", "wk", "wv")}
+    if allow_qkv and _fusable([p["wq"], p["wk"], p["wv"]]):
+        return {"wqkv": fuse_linears([p["wq"], p["wk"], p["wv"]]), **rest}
+    if _fusable([p["wk"], p["wv"]]):
+        return {"wq": p["wq"], "wkv": fuse_linears([p["wk"], p["wv"]]),
+                **rest}
+    return p
+
+
+def fuse_ffn(p: dict) -> dict:
+    """{w1, wg, w2} -> {w1g, w2} with ``w1g`` output = [up, gate]."""
+    if "w1g" in p or "w1" not in p or "wg" not in p:
+        return p
+    if not _fusable([p["w1"], p["wg"]]):
+        return p
+    rest = {k: v for k, v in p.items() if k not in ("w1", "wg")}
+    return {"w1g": fuse_linears([p["w1"], p["wg"]]), **rest}
+
+
+def fuse_model(params: Any, _key: str = "") -> Any:
+    """Recursively fuse every attention QKV triple and gated-FFN pair in a
+    model parameter tree (stacked layer trees included).  The result runs
+    through the unchanged model code — ``layers.attention_apply`` /
+    ``ffn_apply`` dispatch on the fused keys.  Cross-attention blocks
+    (``xattn``) fuse K/V only: their q reads a different stream."""
+    if not isinstance(params, dict):
+        return params
+    p = {k: fuse_model(v, k) for k, v in params.items()}
+    if all(k in p for k in ("wq", "wk", "wv")):
+        p = fuse_attention(p, allow_qkv=(_key != "xattn"))
+    if "w1" in p and "wg" in p:
+        p = fuse_ffn(p)
+    return p
+
+
+def fused_split_sizes(h: int, kv: int, hd: int) -> tuple[int, int, int]:
+    """Output-slice widths of a fused QKV projection: (q, k, v)."""
+    return h * hd, kv * hd, kv * hd
+
+
+__all__ = ["fuse_linears", "fuse_attention", "fuse_ffn", "fuse_model",
+           "fused_split_sizes"]

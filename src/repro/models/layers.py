@@ -71,12 +71,23 @@ def attention_init(key, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     ks = jax.random.split(key, 4)
     spec = cfg.monarch
+    wo = linear_init(ks[3], h * hd, d, spec=spec,
+                     w_init_scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1)))
+    if cfg.fused_proj:
+        # decode fast path, built fused at init: one widened projection per
+        # weight visit (QKV share the input — the CIM co-activation analogue)
+        if h == kv:
+            return {"wqkv": linear_init(ks[0], d, (h + 2 * kv) * hd,
+                                        spec=spec),
+                    "wo": wo}
+        return {"wq": linear_init(ks[0], d, h * hd, spec=spec),
+                "wkv": linear_init(ks[1], d, 2 * kv * hd, spec=spec),
+                "wo": wo}
     return {
         "wq": linear_init(ks[0], d, h * hd, spec=spec),
         "wk": linear_init(ks[1], d, kv * hd, spec=spec),
         "wv": linear_init(ks[2], d, kv * hd, spec=spec),
-        "wo": linear_init(ks[3], h * hd, d, spec=spec,
-                          w_init_scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        "wo": wo,
     }
 
 
@@ -188,11 +199,28 @@ def attention_apply(
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     dtype = x.dtype
 
-    q = linear_apply(params["wq"], x, backend=backend).reshape(B, S, h, hd)
     kv_src = x if kv_input is None else kv_input
     Skv = kv_src.shape[1]
-    k = linear_apply(params["wk"], kv_src, backend=backend).reshape(B, Skv, kv, hd)
-    v = linear_apply(params["wv"], kv_src, backend=backend).reshape(B, Skv, kv, hd)
+    if "wqkv" in params:
+        # fused projection: one weight visit computes q, k and v (exact
+        # concatenation of the separate outputs — see models/fuse.py)
+        assert kv_input is None, "fused QKV is self-attention only"
+        qd, kd = h * hd, kv * hd
+        qkv = linear_apply(params["wqkv"], x, backend=backend)
+        q = qkv[..., :qd].reshape(B, S, h, hd)
+        k = qkv[..., qd:qd + kd].reshape(B, Skv, kv, hd)
+        v = qkv[..., qd + kd:].reshape(B, Skv, kv, hd)
+    elif "wkv" in params:
+        q = linear_apply(params["wq"], x, backend=backend).reshape(B, S, h, hd)
+        kvh = linear_apply(params["wkv"], kv_src, backend=backend)
+        k = kvh[..., :kv * hd].reshape(B, Skv, kv, hd)
+        v = kvh[..., kv * hd:].reshape(B, Skv, kv, hd)
+    else:
+        q = linear_apply(params["wq"], x, backend=backend).reshape(B, S, h, hd)
+        k = linear_apply(params["wk"], kv_src, backend=backend).reshape(
+            B, Skv, kv, hd)
+        v = linear_apply(params["wv"], kv_src, backend=backend).reshape(
+            B, Skv, kv, hd)
 
     if pos is None:
         q_pos = jnp.arange(S)
@@ -325,11 +353,12 @@ def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     spec = cfg.monarch
     gated = cfg.ffn_type in ("swiglu", "geglu")
     ks = jax.random.split(key, 3)
-    p = {
-        "w1": linear_init(ks[0], d, ff, spec=spec),
-        "w2": linear_init(ks[1], ff, d, spec=spec,
-                          w_init_scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
-    }
+    w2 = linear_init(ks[1], ff, d, spec=spec,
+                     w_init_scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1)))
+    if gated and cfg.fused_proj:
+        # up+gate in one weight visit; output layout [up, gate]
+        return {"w1g": linear_init(ks[0], d, 2 * ff, spec=spec), "w2": w2}
+    p = {"w1": linear_init(ks[0], d, ff, spec=spec), "w2": w2}
     if gated:
         p["wg"] = linear_init(ks[2], d, ff, spec=spec)
     return p
@@ -337,12 +366,18 @@ def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
 
 def ffn_apply(params: dict, x: jax.Array, cfg: ModelConfig,
               backend: str = "einsum") -> jax.Array:
-    h = linear_apply(params["w1"], x, backend=backend)
+    g = None
+    if "w1g" in params:  # fused up+gate projection ([up, gate] layout)
+        hg = linear_apply(params["w1g"], x, backend=backend)
+        ff = hg.shape[-1] // 2
+        h, g = hg[..., :ff], hg[..., ff:]
+    else:
+        h = linear_apply(params["w1"], x, backend=backend)
+        if cfg.ffn_type in ("swiglu", "geglu"):
+            g = linear_apply(params["wg"], x, backend=backend)
     if cfg.ffn_type == "swiglu":
-        g = linear_apply(params["wg"], x, backend=backend)
         h = jax.nn.silu(g) * h
     elif cfg.ffn_type == "geglu":
-        g = linear_apply(params["wg"], x, backend=backend)
         h = jax.nn.gelu(g) * h
     elif cfg.ffn_type == "gelu":
         h = jax.nn.gelu(h)

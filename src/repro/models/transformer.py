@@ -56,7 +56,10 @@ def attn_block_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
         p["ln2_post"] = L.norm_init(cfg.d_model, cfg.norm_type)
     if cross:
         p["ln_x"] = L.norm_init(cfg.d_model, cfg.norm_type)
-        p["xattn"] = L.attention_init(ks[2], cfg)
+        # cross-attention k/v read enc_out, q reads the decoder stream —
+        # never init it with a fused QKV projection
+        xcfg = dataclasses.replace(cfg, fused_proj=False)
+        p["xattn"] = L.attention_init(ks[2], xcfg)
     return p
 
 

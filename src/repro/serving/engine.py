@@ -114,13 +114,37 @@ class ContinuousBatchingEngine:
                  n_pages: Optional[int] = None,
                  scheduler_cfg: Optional[SchedulerConfig] = None,
                  cost_model: Optional[CostModel] = None,
-                 use_paged_kernel: bool = False):
+                 use_paged_kernel: bool = False,
+                 quantize: Optional[str] = None,
+                 fuse_projections: bool = False):
         if cfg.layer_kind != "attn":
             raise ValueError(
                 "continuous batching needs an attn stack; SSM/hybrid models "
                 "serve through the legacy ServeEngine")
         if use_paged_kernel:
             cfg = dataclasses.replace(cfg, paged_kernel=True)
+        # decode fast path, applied once at load: exact QKV/gate-up fusion,
+        # then per-block int8/int4 quantization of the Monarch factors
+        # (models/decode_path.py).  The jitted steps below consume the
+        # transformed tree unchanged — layers dispatch on the param keys.
+        # NOTE on backends: the in-kernel-dequant Pallas path engages when
+        # cfg.monarch.backend == "pallas" (the TPU deployment); with the
+        # default "einsum" backend quantized factors dequantize per call,
+        # which compresses storage and the cost-model-priced admission
+        # (weight bytes), not CPU wall clock.
+        from repro.core.quant import BITS_BY_NAME
+
+        if quantize is not None and quantize not in BITS_BY_NAME:
+            raise ValueError(
+                f"quantize must be one of {sorted(BITS_BY_NAME)} or None, "
+                f"got {quantize!r}")
+        if fuse_projections or quantize:
+            from repro.models.decode_path import prepare_decode_params
+
+            params = prepare_decode_params(
+                params, cfg, fuse=fuse_projections,
+                bits=BITS_BY_NAME.get(quantize))
+        self.weight_bits = BITS_BY_NAME.get(quantize, 32)
         self.cfg = cfg
         self.params = params
         self.page_size = page_size

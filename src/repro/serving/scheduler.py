@@ -77,6 +77,18 @@ class HBMCostModel:
         return cls(n_params=cfg.active_param_count(),
                    kv_bytes_per_token=kvb, **kw)
 
+    @classmethod
+    def from_params(cls, cfg, params, **kw) -> "HBMCostModel":
+        """Price weight traffic by the ACTUAL parameter tree's dtypes, so a
+        quantized (int8 / packed-int4) decode path admits wider batches: the
+        per-step weight read is the compressed footprint, not 4 bytes/param.
+        ``bytes_per_param`` = total tree bytes / modeled param count (scales
+        and fp32 residue like norms/embedding keep it honest)."""
+        from repro.core.quant import tree_weight_bytes
+
+        bpp = tree_weight_bytes(params) / max(cfg.param_count(), 1)
+        return cls.from_model_config(cfg, bytes_per_param=bpp, **kw)
+
 
 class CIMCostModel:
     """Step cost from the paper's CIM simulator (Table-I composition).
@@ -90,14 +102,23 @@ class CIMCostModel:
 
     def __init__(self, model_cfg, strategy: str = "sparse",
                  cim_cfg=None, seq_len: int = 512,
-                 attn_dpu_ns_per_key: float = 0.05):
+                 attn_dpu_ns_per_key: float = 0.05,
+                 weight_bits: int = 8, fused_proj: bool = False):
+        import dataclasses as _dc
+
         from repro.cim.simulator import simulate
         from repro.cim.spec import CIMConfig
         from repro.cim.workload import decode_workload
 
         self.strategy = strategy
-        self._cfg = cim_cfg or CIMConfig()
-        desc = decode_workload(model_cfg, seq_len=seq_len)
+        cfg = cim_cfg or CIMConfig()
+        # weight precision <-> ADC resolution (cim/spec.py): lower-precision
+        # cells never need a finer conversion than their own bit width
+        if weight_bits < cfg.weight_bits:
+            cfg = _dc.replace(cfg, weight_bits=weight_bits)
+        self._cfg = cfg
+        desc = decode_workload(model_cfg, seq_len=seq_len,
+                               fused_proj=fused_proj)
         r = simulate(desc, strategy, self._cfg)
         self.per_token_ns = r.latency_ns_per_token
         self.per_token_nj = r.energy_nj_per_token
