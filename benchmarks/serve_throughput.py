@@ -1,23 +1,32 @@
-"""Serving throughput: continuous batching vs the seed single-request path.
+"""Serving throughput: the unified mixed-step engine vs the seed path, plus
+a chunked-prefill sweep.
 
-Measures decode tokens/s at increasing concurrency.  The baseline processes
-the same request set the way the seed engine did — one request at a time
-through a B=1 ``ServeEngine`` (Python prefill loop + per-token steps) — and
-the continuous engine serves them through the paged-KV slot batch.  Greedy
-sampling, no EOS, so both paths emit exactly ``new_tokens`` per request and
-outputs must be token-identical (asserted).
+Part 1 (throughput): decode tokens/s at increasing concurrency.  The
+baseline processes the same request set the way the seed engine did — one
+request at a time through a B=1 ``ServeEngine`` (Python prefill loop +
+per-token steps) — and the continuous engine serves them through the
+mixed-step slot batch.  Greedy sampling, no EOS, so both paths emit exactly
+``new_tokens`` per request and outputs must be token-identical (asserted).
 
-Besides aggregate tok/s, a second *instrumented* pass (per-step device sync,
-excluded from the throughput timing) records per-step decode latency
-percentiles and the prefill/decode wall-time split, so the JSON shows the
-latency distribution a request actually experiences, not just the mean.
+Part 2 (chunk sweep): chunk size x pool size, under both ``HBMCostModel``
+and ``CIMCostModel``.  Requests arrive staggered so prefill work lands
+while other sequences decode; each cell reports the per-step latency
+distribution of *decode-bearing* steps (per-step device sync, excluded
+from part 1's throughput timing) — the latency a decoding request actually
+experiences when a long prompt joins.  Without chunking
+(chunk = full prompt) the joining prompt's whole prefill rides one step and
+decode p95 spikes; with bounded chunks it amortizes.  The tight-pool cells
+force mid-flight preemption (counted in the row) and still assert
+token-identical greedy output.
 
 Emits BENCH_serving.json:
-  {"results": [{"concurrency": N, "baseline_tok_s": ..., "continuous_tok_s":
-   ..., "speedup": ..., "decode_p50_ms": ..., "decode_p95_ms": ...,
-   "prefill_frac": ...}, ...], "outputs_match": true}
+  {"results": [{"concurrency": N, "baseline_tok_s": ..., ...}, ...],
+   "chunked": [{"cost_model": "hbm", "chunk": 16, "pool": "tight",
+                "decode_p50_ms": ..., "decode_p95_ms": ...,
+                "preemptions": ..., ...}, ...],
+   "outputs_match": true}
 
-Run:  PYTHONPATH=src python benchmarks/serve_throughput.py
+Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
 """
 
 from __future__ import annotations
@@ -31,8 +40,8 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
-                           ServeEngine)
+from repro.serving import (CIMCostModel, ContinuousBatchingEngine,
+                           GenerationConfig, HBMCostModel, ServeEngine)
 from repro.serving.request import SamplingParams
 
 CFG = ModelConfig(name="bench", d_model=128, n_layers=2, n_heads=4,
@@ -57,42 +66,90 @@ def _continuous(params, prompts, gen, max_len, max_slots):
     return out
 
 
-def _continuous_instrumented(params, prompts, gen, max_len, max_slots):
-    """Per-step latency profile of the continuous engine: syncs the device
-    after every ``step()`` (so each step's wall time is real, at the cost of
-    the pipelining the throughput pass keeps) and splits steps that admitted
-    a prefill from pure decode steps."""
-    eng = ContinuousBatchingEngine(
-        CFG, params, max_slots=max_slots, page_size=8, max_len=max_len)
-    for i, p in enumerate(prompts):
-        eng.add_request(p, SamplingParams(
+def _instrumented(params, prompts, gen, *, max_len, max_slots, chunk=None,
+                  n_pages=None, cost_model=None, slo_ns=None, stagger=0,
+                  warm=True):
+    """Latency profile of one engine configuration: syncs the device after
+    every ``step()`` (so each step's wall time is real, at the cost of the
+    pipelining the throughput pass keeps), staggering arrivals so prefill
+    chunks land inside a live decode batch.  ``slo_ns`` arms the scheduler's
+    step-latency budget so the cost model actually shapes chunk packing.
+    Returns (metrics, outputs)."""
+    from repro.serving import SchedulerConfig
+
+    kw = dict(max_slots=max_slots, page_size=8, max_len=max_len,
+              cost_model=cost_model,
+              scheduler_cfg=SchedulerConfig(step_latency_budget_ns=slo_ns))
+    if chunk is not None:
+        kw["chunk_size"] = chunk
+    if n_pages is not None:
+        kw["n_pages"] = n_pages
+    if warm:  # compile every span bucket this config will hit, untimed
+        _instrumented(params, prompts,
+                      GenerationConfig(max_new_tokens=2,
+                                       temperature=gen.temperature),
+                      max_len=max_len, max_slots=max_slots, chunk=chunk,
+                      n_pages=n_pages, cost_model=cost_model, slo_ns=slo_ns,
+                      stagger=stagger, warm=False)
+    eng = ContinuousBatchingEngine(CFG, params, **kw)
+    reqs = []
+
+    def submit(i):
+        reqs.append(eng.add_request(prompts[i], SamplingParams(
             max_new_tokens=gen.max_new_tokens, temperature=gen.temperature,
-            eos_id=gen.eos_id, seed=gen.seed + i))
-    decode_ms, prefill_ms = [], 0.0
-    while eng.has_work():
-        pt0 = eng.stats["prefill_tokens"]
+            eos_id=gen.eos_id, seed=gen.seed + i)))
+
+    head = len(prompts) if stagger <= 0 else max(1, len(prompts) // 2)
+    for i in range(head):
+        submit(i)
+    pending = list(range(head, len(prompts)))
+    decode_ms, mixed_ms = [], []
+    seen_buckets: set[int] = set()
+    t_all = time.perf_counter()
+    step = 0
+    while eng.has_work() or pending:
+        if pending and step % max(stagger, 1) == 0:
+            submit(pending.pop(0))
+        d0 = eng.stats["decode_tokens"]
+        p0 = eng.stats["prefill_tokens"]
         t0 = time.perf_counter()
         eng.step()
         jax.block_until_ready(eng._tok)
         dt = (time.perf_counter() - t0) * 1e3
-        if eng.stats["prefill_tokens"] > pt0:
-            prefill_ms += dt
-        else:
-            decode_ms.append(dt)
-    total = prefill_ms + sum(decode_ms)
-    if not decode_ms:  # degenerate 1-token runs: every step admitted
-        decode_ms = [0.0]
-    return {
-        "decode_p50_ms": float(np.percentile(decode_ms, 50)),
-        "decode_p95_ms": float(np.percentile(decode_ms, 95)),
-        "prefill_ms": prefill_ms,
-        "decode_ms": sum(decode_ms),
-        "prefill_frac": prefill_ms / total if total else 0.0,
+        step += 1
+        bucket = getattr(eng, "last_span_bucket", 0)
+        if bucket not in seen_buckets:
+            # first step on a fresh span bucket pays its jit compile (the
+            # warm pass covers the common buckets, but preemption/stall
+            # shrinkage can mint new ones) — keep it out of the percentiles
+            seen_buckets.add(bucket)
+            continue
+        if eng.stats["decode_tokens"] > d0:
+            # a step a decoding request waited on; mixed == prefill rode along
+            (mixed_ms if eng.stats["prefill_tokens"] > p0
+             else decode_ms).append(dt)
+    wall = time.perf_counter() - t_all
+    eng.pool_host.check_invariants()
+    waited = decode_ms + mixed_ms
+    if not waited:  # degenerate 1-token runs
+        waited = [0.0]
+    outs = np.zeros((len(reqs), gen.max_new_tokens), np.int32)
+    for i, r in enumerate(reqs):
+        outs[i, :len(r.output_tokens)] = r.output_tokens
+    metrics = {
+        "decode_p50_ms": float(np.percentile(waited, 50)),
+        "decode_p95_ms": float(np.percentile(waited, 95)),
+        "mixed_step_frac": len(mixed_ms) / len(waited) if waited else 0.0,
+        "steps": eng.stats["mixed_steps"],
+        "preemptions": eng.stats["preemptions"],
+        "tok_s": eng.stats["tokens_out"] / wall,
+        "sim_latency_us": eng.stats["sim_latency_ns"] / 1e3,
+        "sim_energy_uj": eng.stats["sim_energy_nj"] / 1e3,
     }
+    return metrics, outs
 
 
-def run(concurrencies=(1, 2, 4, 8), prompt_len=16, new_tokens=32):
-    params = T.init_params(jax.random.PRNGKey(0), CFG)
+def run_throughput(params, concurrencies, prompt_len, new_tokens):
     gen = GenerationConfig(max_new_tokens=new_tokens)
     max_len = prompt_len + new_tokens + 8
     results = []
@@ -117,31 +174,106 @@ def run(concurrencies=(1, 2, 4, 8), prompt_len=16, new_tokens=32):
         match = bool(np.array_equal(base_out, cont_out))
         all_match &= match
         toks = n * new_tokens
-        lat = _continuous_instrumented(params, prompts, gen, max_len, n)
+        lat, _ = _instrumented(params, prompts, gen, max_len=max_len,
+                               max_slots=n)
         results.append({
             "concurrency": n,
             "baseline_tok_s": toks / t_base,
             "continuous_tok_s": toks / t_cont,
             "speedup": t_base / t_cont,
             "outputs_match": match,
-            **lat,
+            "decode_p50_ms": lat["decode_p50_ms"],
+            "decode_p95_ms": lat["decode_p95_ms"],
         })
         print(f"concurrency={n}: baseline={toks / t_base:7.1f} tok/s  "
               f"continuous={toks / t_cont:7.1f} tok/s  "
               f"speedup={t_base / t_cont:5.2f}x  match={match}  "
               f"p50={lat['decode_p50_ms']:.1f}ms "
-              f"p95={lat['decode_p95_ms']:.1f}ms "
-              f"prefill={lat['prefill_frac'] * 100:.0f}%")
+              f"p95={lat['decode_p95_ms']:.1f}ms")
     return results, all_match
+
+
+def run_chunk_sweep(params, *, chunk_sizes, prompt_len, new_tokens,
+                    n_requests, max_slots, cost_models):
+    """chunk size x pool size x cost model; 'full' = whole prompt per chunk
+    (the unchunked reference point).  Tight pools force preemption."""
+    gen = GenerationConfig(max_new_tokens=new_tokens)
+    max_len = prompt_len + new_tokens + 8
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(300 + i),
+        (prompt_len if i % 2 else prompt_len // 4,), 0, CFG.vocab))
+        for i in range(n_requests)]
+    ref = _baseline(params, prompts, gen, max_len)
+
+    # tight: barely more than ONE request's worst-case footprint — any two
+    # residents collide mid-flight and the lower-priority one is preempted
+    pages_max = -(-(prompt_len + new_tokens) // 8)
+    pools = {"ample": None,  # engine default: every slot at max_len
+             "tight": 1 + pages_max + max(1, pages_max // 4)}
+    rows = []
+    all_match = True
+    for cm_name in cost_models:
+        if cm_name == "hbm":
+            cost = HBMCostModel.from_model_config(CFG)
+        else:
+            cost = CIMCostModel(CFG, strategy="sparse", seq_len=prompt_len)
+        # arm the step SLO: a full-width decode batch plus a mid-size (32
+        # token) chunk must fit.  HBM prefill is weight-pass-dominated so
+        # big chunks still fit; CIM prefill is linear per token, so the
+        # same SLO makes the scheduler interleave smaller chunks — the
+        # cost model must shape the packing, not just the accounting
+        slo = (cost.decode_step_ns(max_slots, prompt_len + new_tokens)
+               + cost.prefill_ns(32))
+        for chunk in chunk_sizes:
+            for pool_name, n_pages in pools.items():
+                m, outs = _instrumented(
+                    params, prompts, gen, max_len=max_len,
+                    max_slots=max_slots,
+                    chunk=None if chunk == "full" else chunk,
+                    n_pages=n_pages, cost_model=cost, slo_ns=slo, stagger=2)
+                match = bool(np.array_equal(ref, outs))
+                all_match &= match
+                rows.append({"cost_model": cm_name, "chunk": chunk,
+                             "pool": pool_name, "slo_ns": slo,
+                             "outputs_match": match, **m})
+                print(f"  [{cm_name}] chunk={str(chunk):>4} pool={pool_name:5} "
+                      f"p50={m['decode_p50_ms']:5.1f}ms "
+                      f"p95={m['decode_p95_ms']:5.1f}ms "
+                      f"steps={m['steps']:3d} "
+                      f"preempt={m['preemptions']:2d} "
+                      f"tok/s={m['tok_s']:6.1f} match={match}")
+    return rows, all_match
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: tiny sweep, 2 chunk sizes")
     args = ap.parse_args()
-    results, all_match = run(new_tokens=args.new_tokens)
-    payload = {"bench": "serving_throughput", "results": results,
+
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    if args.smoke:
+        new_tokens = min(args.new_tokens, 8)
+        results, m1 = run_throughput(params, (2,), prompt_len=16,
+                                     new_tokens=new_tokens)
+        print("chunk sweep (smoke):")
+        chunked, m2 = run_chunk_sweep(
+            params, chunk_sizes=(8, "full"), prompt_len=24,
+            new_tokens=new_tokens, n_requests=4, max_slots=2,
+            cost_models=("hbm",))
+    else:
+        results, m1 = run_throughput(params, (1, 2, 4, 8), prompt_len=16,
+                                     new_tokens=args.new_tokens)
+        print("chunk sweep:")
+        chunked, m2 = run_chunk_sweep(
+            params, chunk_sizes=(16, 64, "full"), prompt_len=48,
+            new_tokens=args.new_tokens, n_requests=6, max_slots=4,
+            cost_models=("hbm", "cim"))
+    all_match = m1 and m2
+    payload = {"bench": "serving_throughput", "smoke": args.smoke,
+               "results": results, "chunked": chunked,
                "outputs_match": all_match}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -1,9 +1,13 @@
-"""Serving example: continuous batching with the paged KV cache.
+"""Serving example: unified chunked-prefill + decode over the paged KV
+cache.
 
 Submits a ragged burst of requests (mixed prompt lengths, per-request
 sampling params), streams tokens as they are produced, and reports
-scheduler/pool statistics — including the CIM cost model's simulated
-latency/energy when ``--cost-model cim`` is selected.
+scheduler/pool statistics — pool occupancy, preemption counts, and the CIM
+cost model's simulated latency/energy when ``--cost-model cim`` is
+selected.  ``--chunk-size`` bounds how many prompt tokens one sequence may
+prefill per mixed step; ``--preempt`` shrinks the page pool so sequences
+are forcibly evicted (and transparently resumed) mid-flight.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--arch mamba2-2_7b]
       (SSM/hybrid archs fall back to the legacy single-batch engine)
@@ -28,6 +32,11 @@ def main():
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=8,
+                    help="max prompt tokens one sequence prefills per step")
+    ap.add_argument("--preempt", action="store_true",
+                    help="shrink the page pool so mid-flight preemption "
+                         "(evict + recompute-on-resume) actually fires")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--cost-model", choices=["none", "hbm", "cim"],
                     default="cim")
@@ -70,10 +79,17 @@ def main():
               f"{cost.per_token_nj:.0f} nJ/token (sparse mapping, "
               f"{wbits}-bit cells)")
 
+    n_pages = None
+    if args.preempt:
+        # barely more than one worst-case request: concurrent sequences must
+        # fight for pages and the loser is evicted + resumed
+        per_req = -(-(20 + args.new_tokens) // args.page_size)
+        n_pages = 1 + per_req + 1
     engine = ContinuousBatchingEngine(
         cfg, params, max_slots=args.max_slots, page_size=args.page_size,
-        max_len=64, cost_model=cost,
-        scheduler_cfg=SchedulerConfig(max_prefill_tokens=64),
+        max_len=64, n_pages=n_pages, cost_model=cost,
+        scheduler_cfg=SchedulerConfig(chunk_size=args.chunk_size,
+                                      max_step_tokens=64),
         use_paged_kernel=args.paged_kernel,
         quantize=args.quantize, fuse_projections=args.fuse)
     if args.cost_model == "hbm":
@@ -106,16 +122,27 @@ def main():
         # stagger arrivals: run a scheduler iteration per submit (short
         # requests can finish during the submission phase — keep them)
         finished.extend(engine.step())
+        ps = engine.pool_host.stats()
+        print(f"  step {engine.step_idx:3d} pool: "
+              f"{ps.allocated_pages}/{ps.n_pages} pages allocated "
+              f"({ps.utilization * 100:.0f}% utilized), "
+              f"{engine.stats['preemptions']} preemptions so far")
 
     finished.extend(engine.run())
     print(f"\nfinished {len(finished)} requests")
     for r in sorted(finished, key=lambda r: r.req_id):
         print(f"req{r.req_id}: prompt_len={r.prompt_len} "
               f"admitted@{r.admitted_step} done@{r.finished_step} "
-              f"({r.finish_reason.value}) -> {r.output_tokens}")
+              f"({r.finish_reason.value}) preempted={r.num_preemptions}x "
+              f"-> {r.output_tokens}")
     s = engine.stats
-    print(f"\nsteps={engine.step_idx} decode_steps={s['decode_steps']} "
-          f"tokens_out={s['tokens_out']} prefill_tokens={s['prefill_tokens']}")
+    print(f"\nsteps={engine.step_idx} mixed_steps={s['mixed_steps']} "
+          f"tokens_out={s['tokens_out']} decode_tokens={s['decode_tokens']} "
+          f"prefill_tokens={s['prefill_tokens']} "
+          f"preemptions={s['preemptions']}")
+    ps = engine.pool_host.stats()
+    print(f"pool at exit: {ps.allocated_pages}/{ps.n_pages} pages allocated, "
+          f"{ps.free_pages} free")
     if cost is not None and s["sim_latency_ns"]:
         print(f"simulated decode cost ({args.cost_model} model): "
               f"{s['sim_latency_ns']/1e3:.1f} us, "

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: paged-KV decode attention (one query per sequence).
+"""Pallas TPU kernel: paged-KV attention over variable-length query spans.
 
 The continuous-batching engine stores KV in fixed-size pages owned by a
 shared pool; a sequence's pages are scattered, so dense attention would
@@ -9,9 +9,19 @@ scalar-prefetched page table, so each step DMAs exactly one page into VMEM
 and folds it into a flash-style running softmax.  No (B, T) KV
 materialization, no host round-trips.
 
-Grid: (B, MP).  Scalar prefetch: page_table (B, MP), lengths (B,),
-window (1,).  Scratch: per-head running max / normalizer / accumulator,
-persistent across the MP inner steps of one sequence.
+The unified engine iteration mixes decode tokens and prefill chunks in one
+forward, so every sequence contributes a query *span*: row ``b`` carries
+``span_len[b]`` queries at global positions ``start[b] + i``.  Masking is
+causal within the span (query ``i`` sees keys at positions
+``<= start[b] + i``) and window-limited like the decode path; rows with
+``i >= span_len[b]`` are padding and return zeros.  A span of 1 is exactly
+the old decode kernel; ``paged_attention`` keeps that single-query
+signature as a thin wrapper.
+
+Grid: (B, MP).  Scalar prefetch: page_table (B, MP), start (B,),
+span_len (B,), window (1,).  Scratch: per-(span, head) running max /
+normalizer / accumulator, persistent across the MP inner steps of one
+sequence.
 
 On CPU (this container) the kernel executes with ``interpret=True``; on TPU
 the same BlockSpecs compile through Mosaic.
@@ -28,8 +38,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _paged_attn_kernel(pt_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref, *, page_size: int):
+def _paged_span_kernel(pt_ref, st_ref, sp_ref, win_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, acc_ref, *, page_size: int):
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -39,80 +49,107 @@ def _paged_attn_kernel(pt_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[:] = jnp.zeros_like(l_ref)
         acc_ref[:] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)       # (H, hd)
+    q = q_ref[0].astype(jnp.float32)       # (S, H, hd)
     k = k_ref[0].astype(jnp.float32)       # (pg, KV, hd)
     v = v_ref[0].astype(jnp.float32)
-    H, hd = q.shape
+    S, H, hd = q.shape
     pg, KV, _ = k.shape
     g = H // KV
 
-    qh = q.reshape(KV, g, hd)
-    s = jnp.einsum("kgh,tkh->kgt", qh, k) / math.sqrt(hd)  # (KV,g,pg)
+    qh = q.reshape(S, KV, g, hd)
+    s = jnp.einsum("skgh,tkh->skgt", qh, k) / math.sqrt(hd)  # (S,KV,g,pg)
     t = i * page_size + jnp.arange(pg)
-    q_pos = len_ref[b] - 1
-    ok = (t <= q_pos) & ((q_pos - t) < win_ref[0])
-    s = jnp.where(ok[None, None, :], s, -1e30).reshape(H, pg)
+    q_pos = st_ref[b] + jnp.arange(S)                        # (S,)
+    ok = (t[None, :] <= q_pos[:, None]) \
+        & ((q_pos[:, None] - t[None, :]) < win_ref[0])       # (S, pg)
+    s = jnp.where(ok[:, None, None, :], s, -1e30).reshape(S, H, pg)
 
-    m_prev = m_ref[:, 0]
-    l_prev = l_ref[:, 0]
+    m_prev = m_ref[:]                                        # (S, H)
+    l_prev = l_ref[:]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     # explicit ok-multiply: a fully-masked page would otherwise contribute
     # exp(-1e30 - (-1e30)) = 1 per key to the normalizer
-    p = jnp.exp(s - m_new[:, None]) * ok[None, :].astype(jnp.float32)
+    p = jnp.exp(s - m_new[..., None]) * ok[:, None, :].astype(jnp.float32)
     scale = jnp.exp(m_prev - m_new)
-    l_ref[:, 0] = l_prev * scale + jnp.sum(p, axis=-1)
-    pv = jnp.einsum("kgt,tkh->kgh", p.reshape(KV, g, pg), v).reshape(H, hd)
-    acc_ref[:] = acc_ref[:] * scale[:, None] + pv
-    m_ref[:, 0] = m_new
+    l_ref[:] = l_prev * scale + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("skgt,tkh->skgh", p.reshape(S, KV, g, pg), v)
+    acc_ref[:] = acc_ref[:] * scale[..., None] + pv.reshape(S, H, hd)
+    m_ref[:] = m_new
 
     @pl.when(i == pl.num_programs(1) - 1)
     def _emit():
-        out = acc_ref[:] / jnp.maximum(l_ref[:], 1e-30)
-        o_ref[0] = out.astype(o_ref.dtype)
+        out = acc_ref[:] / jnp.maximum(l_ref[:], 1e-30)[..., None]
+        valid = (jnp.arange(S) < sp_ref[b])[:, None, None]
+        o_ref[0] = jnp.where(valid, out, 0.0).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _paged_attention(q, k_pages, v_pages, page_table, lengths, window,
-                     *, interpret: bool):
-    B, H, hd = q.shape
+def _paged_attention_span(q, k_pages, v_pages, page_table, start, span_len,
+                          window, *, interpret: bool):
+    B, S, H, hd = q.shape
     _, pg, KV, _ = k_pages.shape
     MP = page_table.shape[1]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(B, MP),
         in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, i, pt, ln, wn: (b, 0, 0)),
+            pl.BlockSpec((1, S, H, hd),
+                         lambda b, i, pt, st, sp, wn: (b, 0, 0, 0)),
             pl.BlockSpec((1, pg, KV, hd),
-                         lambda b, i, pt, ln, wn: (pt[b, i], 0, 0, 0)),
+                         lambda b, i, pt, st, sp, wn: (pt[b, i], 0, 0, 0)),
             pl.BlockSpec((1, pg, KV, hd),
-                         lambda b, i, pt, ln, wn: (pt[b, i], 0, 0, 0)),
+                         lambda b, i, pt, st, sp, wn: (pt[b, i], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda b, i, pt, ln, wn: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, S, H, hd),
+                               lambda b, i, pt, st, sp, wn: (b, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((H, 1), jnp.float32),
-            pltpu.VMEM((H, 1), jnp.float32),
-            pltpu.VMEM((H, hd), jnp.float32),
+            pltpu.VMEM((S, H), jnp.float32),
+            pltpu.VMEM((S, H), jnp.float32),
+            pltpu.VMEM((S, H, hd), jnp.float32),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_paged_attn_kernel, page_size=pg),
+        functools.partial(_paged_span_kernel, page_size=pg),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      window.reshape(1).astype(jnp.int32), q, k_pages, v_pages)
+    )(page_table.astype(jnp.int32), start.astype(jnp.int32),
+      span_len.astype(jnp.int32), window.reshape(1).astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"  # Mosaic-only lowering
+
+
+def paged_attention_span(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                         page_table: jax.Array, start: jax.Array,
+                         span_len: jax.Array, window: jax.Array) -> jax.Array:
+    """q: (B, S, H, hd) query spans — row ``b``'s query ``i`` sits at global
+    position ``start[b] + i`` and is valid iff ``i < span_len[b]`` (invalid
+    rows return zeros); k/v_pages: (P, page, KV, hd); page_table: (B, MP);
+    window: int32 scalar sliding window (huge value = global).
+    Causal within the span: query ``i`` attends keys at positions
+    ``<= start[b] + i`` only.  Returns (B, S, H, hd)."""
+    return _paged_attention_span(q, k_pages, v_pages, page_table, start,
+                                 span_len, jnp.asarray(window),
+                                 interpret=_interpret())
 
 
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, lengths: jax.Array,
                     window: jax.Array) -> jax.Array:
-    """q: (B, H, hd) single-position queries; k/v_pages: (P, page, KV, hd);
-    page_table: (B, MP); lengths: (B,) valid keys per row (current token
-    included); window: int32 scalar sliding window (huge value = global).
+    """Single-query decode special case (span of 1 per sequence).
+
+    q: (B, H, hd) single-position queries; lengths: (B,) valid keys per row
+    (current token included, so the query sits at position ``lengths - 1``).
     Returns (B, H, hd)."""
-    interp = jax.default_backend() != "tpu"  # Mosaic-only lowering
-    return _paged_attention(q, k_pages, v_pages, page_table, lengths,
-                            jnp.asarray(window), interpret=interp)
+    B = q.shape[0]
+    out = _paged_attention_span(
+        q[:, None], k_pages, v_pages, page_table,
+        lengths.astype(jnp.int32) - 1, jnp.ones((B,), jnp.int32),
+        jnp.asarray(window), interpret=_interpret())
+    return out[:, 0]
 
 
-__all__ = ["paged_attention"]
+__all__ = ["paged_attention", "paged_attention_span"]

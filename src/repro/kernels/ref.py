@@ -50,31 +50,51 @@ def monarch_q_ref(x: jax.Array, Lq: jax.Array, Ls: jax.Array,
     return monarch_ref(x.astype(jnp.float32), L, R)
 
 
-def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                        page_table: jax.Array, lengths: jax.Array,
-                        window) -> jax.Array:
-    """Oracle for the paged decode-attention kernel: gather every sequence's
-    pages into a contiguous KV buffer, then plain masked softmax attention.
+def paged_attention_span_ref(q: jax.Array, k_pages: jax.Array,
+                             v_pages: jax.Array, page_table: jax.Array,
+                             start: jax.Array, span_len: jax.Array,
+                             window) -> jax.Array:
+    """Oracle for the span-aware paged-attention kernel: gather every
+    sequence's pages into a contiguous KV buffer, then plain masked softmax
+    attention, causal within the span.
 
-    q: (B, H, hd), k/v_pages: (P, page, KV, hd), page_table: (B, MP),
-    lengths: (B,) valid keys per row, window: sliding window (scalar).
+    q: (B, S, H, hd) — row ``b``'s query ``i`` sits at global position
+    ``start[b] + i`` and is valid iff ``i < span_len[b]`` (invalid rows
+    return zeros); k/v_pages: (P, page, KV, hd); page_table: (B, MP);
+    window: sliding window (scalar).
     """
-    B, H, hd = q.shape
+    B, S, H, hd = q.shape
     _, pg, KV, _ = k_pages.shape
     MP = page_table.shape[1]
     g = H // KV
     kk = k_pages[page_table].reshape(B, MP * pg, KV, hd).astype(jnp.float32)
     vv = v_pages[page_table].reshape(B, MP * pg, KV, hd).astype(jnp.float32)
-    qh = q.reshape(B, KV, g, hd).astype(jnp.float32)
-    s = jnp.einsum("bkgh,btkh->bkgt", qh, kk) / jnp.sqrt(jnp.float32(hd))
-    t = jnp.arange(MP * pg)[None, :]
-    q_pos = (lengths - 1)[:, None]
-    ok = (t <= q_pos) & ((q_pos - t) < window)
-    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    qh = q.reshape(B, S, KV, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bskgt", qh, kk) / jnp.sqrt(jnp.float32(hd))
+    t = jnp.arange(MP * pg)[None, None, :]
+    q_pos = start[:, None] + jnp.arange(S)[None, :]          # (B, S)
+    ok = (t <= q_pos[..., None]) & ((q_pos[..., None] - t) < window)
+    s = jnp.where(ok[:, :, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgt,btkh->bkgh", p, vv)
-    return out.reshape(B, H, hd).astype(q.dtype)
+    out = jnp.einsum("bskgt,btkh->bskgh", p, vv).reshape(B, S, H, hd)
+    valid = (jnp.arange(S)[None, :] < span_len[:, None])[..., None, None]
+    return jnp.where(valid, out, 0.0).astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array,
+                        window) -> jax.Array:
+    """Single-query (decode) oracle: span of 1 at position ``lengths - 1``.
+
+    q: (B, H, hd), k/v_pages: (P, page, KV, hd), page_table: (B, MP),
+    lengths: (B,) valid keys per row, window: sliding window (scalar).
+    """
+    B = q.shape[0]
+    out = paged_attention_span_ref(
+        q[:, None], k_pages, v_pages, page_table, lengths - 1,
+        jnp.ones((B,), jnp.int32), window)
+    return out[:, 0]
 
 
 __all__ = ["bdmm_ref", "monarch_ref", "bdmm_q_ref", "monarch_q_ref",
-           "paged_attention_ref"]
+           "paged_attention_ref", "paged_attention_span_ref"]

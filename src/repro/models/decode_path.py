@@ -11,7 +11,7 @@ two compression/fusion levers ONCE at load time:
 
 The prepared tree is layer-stacked (``(num_layers, k, q, p)`` factors, as
 ``decoder_stack_init`` builds them), so ``transformer.decode_step`` /
-``paged_decode_step`` run the whole per-token step as ONE compiled
+``paged_mixed_step`` run the whole per-token step as ONE compiled
 ``lax.scan`` loop over layers.
 
 ``decode_step_layerwise`` is the *reference* per-layer path — a Python loop

@@ -179,6 +179,7 @@ def attention_apply(
     cache: Optional[dict] = None,
     pos: Optional[jax.Array] = None,
     page_table: Optional[jax.Array] = None,
+    span_len: Optional[jax.Array] = None,
     kv_input: Optional[jax.Array] = None,
     bidir: bool = False,
     backend: str = "einsum",
@@ -191,8 +192,12 @@ def attention_apply(
     ``cache``: either the contiguous ring cache {"k": (B,T,KV,hd), "v": ...}
     or a paged cache {"k_pages": (P,page,KV,hd), "v_pages": ...} addressed
     through ``page_table`` (B, max_pages).  Both accept S >= 1 new tokens per
-    row (S > 1 is the batched-prefill path), written at positions
-    ``pos[b] + arange(S)``.
+    row (S > 1 is the chunked prefill / mixed-step path), written at
+    positions ``pos[b] + arange(S)``.
+    ``span_len``: (B,) valid new tokens per row of the paged path — rows may
+    carry spans shorter than S (the mixed decode + prefill-chunk batch);
+    positions at or beyond ``span_len[b]`` write to the sink page instead of
+    the sequence's tables.  None means every row's span is the full S.
     Returns (out, updated_cache).
     """
     B, S, d = x.shape
@@ -242,7 +247,8 @@ def attention_apply(
     new_cache = None
     if cache is not None and "k_pages" in cache:
         out, new_cache = _paged_attend(
-            q, k, v, cache, page_table, q_pos, cfg, window, dtype)
+            q, k, v, cache, page_table, q_pos, cfg, window, dtype,
+            span_len=span_len)
     elif cache is not None:
         # write the S new k/v rows at pos..pos+S-1 into the ring cache,
         # attend each query over the cache under its own causal horizon
@@ -301,34 +307,46 @@ def paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int, dtype) -> d
 
 
 def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
-                  window, dtype):
+                  window, dtype, span_len=None):
     """Write S new k/v rows through the page table, attend over the gathered
     pages.
 
     q: (B,S,H,hd); k/v: (B,S,KV,hd); cache pages: (P, page, KV, hd);
-    page_table: (B, MP) physical page ids; q_pos: (B,S) global positions.
+    page_table: (B, MP) physical page ids; q_pos: (B,S) global positions;
+    span_len: optional (B,) valid-token count per row (None = full S).
     Logical page ``g // page`` of global position ``g`` maps to physical page
     ``page_table[b, g // page]``.  Unallocated table entries point at the
     reserved sink page 0; they are never attended because the causal mask
-    only admits keys at positions <= q_pos.
+    only admits keys at positions <= q_pos.  Positions past a row's span are
+    padding — their writes are redirected to the sink page so they can never
+    land in another logical position's live page.
     """
     kp, vp = cache["k_pages"], cache["v_pages"]
     pg = kp.shape[1]
     B, S = q_pos.shape
     phys = jnp.take_along_axis(page_table, q_pos // pg, axis=1)  # (B,S)
     off = q_pos % pg
+    if span_len is not None:
+        valid = jnp.arange(S)[None, :] < span_len[:, None]       # (B,S)
+        phys = jnp.where(valid, phys, 0)  # page 0 is the reserved sink
     kp = kp.at[phys, off].set(k)
     vp = vp.at[phys, off].set(v)
     new_cache = {"k_pages": kp, "v_pages": vp}
 
-    if cfg.paged_kernel and S == 1 and cfg.logit_softcap is None:
-        from repro.kernels.paged import paged_attention  # lazy: optional path
+    if cfg.paged_kernel and cfg.logit_softcap is None:
+        from repro.kernels.paged import (  # lazy: optional path
+            paged_attention, paged_attention_span)
 
         win = jnp.asarray(
             1_000_000_000 if window is None else window, jnp.int32)
-        out = paged_attention(q[:, 0], kp, vp, page_table,
-                              q_pos[:, 0] + 1, win)
-        return out[:, None], new_cache
+        if S == 1 and span_len is None:
+            out = paged_attention(q[:, 0], kp, vp, page_table,
+                                  q_pos[:, 0] + 1, win)
+            return out[:, None], new_cache
+        sp = jnp.full((B,), S, jnp.int32) if span_len is None else span_len
+        out = paged_attention_span(q, kp, vp, page_table, q_pos[:, 0], sp,
+                                   win)
+        return out, new_cache
 
     MP = page_table.shape[1]
     kk = kp[page_table].reshape(B, MP * pg, *kp.shape[2:])  # (B,T,KV,hd)

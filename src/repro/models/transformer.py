@@ -72,6 +72,7 @@ def attn_block_apply(
     cache: Optional[dict] = None,
     pos=None,
     page_table=None,
+    span_len=None,
     enc_out=None,
     bidir: bool = False,
 ) -> tuple[jax.Array, Optional[dict], jax.Array]:
@@ -79,7 +80,8 @@ def attn_block_apply(
     h = L.norm_apply(p["ln1"], x, cfg.norm_type)
     a, new_attn_cache = L.attention_apply(
         p["attn"], h, cfg, window=window, cache=cache["attn"] if cache else None,
-        pos=pos, page_table=page_table, bidir=bidir, backend=cfg.monarch.backend,
+        pos=pos, page_table=page_table, span_len=span_len, bidir=bidir,
+        backend=cfg.monarch.backend,
     )
     if cfg.sandwich_norm:
         a = L.norm_apply(p["ln1_post"], a, cfg.norm_type)
@@ -172,6 +174,7 @@ def decoder_stack_apply(
     cache: Optional[dict] = None,
     pos=None,
     page_table=None,
+    span_len=None,
     enc_out=None,
     bidir: bool = False,
     train: bool = True,
@@ -195,7 +198,7 @@ def decoder_stack_apply(
             p, win, c = pl
             h, nc, lb = attn_block_apply(
                 p, h, cfg, window=win, cache=c, pos=pos,
-                page_table=page_table, enc_out=enc_out)
+                page_table=page_table, span_len=span_len, enc_out=enc_out)
             return h, (nc, lb)
         x, (new_caches, lbs) = jax.lax.scan(
             body, x, (params["layers"], windows, cache["layers"]))
@@ -411,46 +414,44 @@ def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
     return {"layers": _bcast(one, (cfg.n_layers,))}
 
 
-def paged_prefill(params, tokens: jax.Array, lengths: jax.Array,
-                  page_table: jax.Array, pool: dict, cfg: ModelConfig):
-    """One forward over a right-padded (B, S) prompt block, writing k/v for
-    every position through ``page_table`` into the shared pool.  Rows may
-    have different true ``lengths``; padded positions are written but never
-    attended (causal mask + the engine resets ``pos`` to the true length).
-    Returns (logits at each row's last real position, updated pool)."""
+def paged_mixed_step(params, tokens: jax.Array, start: jax.Array,
+                     span_len: jax.Array, page_table: jax.Array, pool: dict,
+                     cfg: ModelConfig):
+    """ONE unified engine iteration: every row of the slot batch contributes
+    a variable-length token span — a prefill chunk, the tail of a chunked
+    prompt, or a single decode token.
+
+    tokens: (B, S) right-padded spans; row ``b``'s token ``i`` sits at
+    global position ``start[b] + i`` and is real iff ``i < span_len[b]``.
+    Real positions write k/v through ``page_table`` into the shared pool;
+    padding positions are redirected to the sink page (they can never touch
+    a live page — with incremental allocation the table may not even cover
+    them).  Attention is causal within the span and over all previously
+    written positions.  A span of 0 makes the row fully inert (pool
+    untouched, logits garbage — the engine only samples rows whose span
+    reaches the end of their known tokens).
+
+    Returns (logits at each row's last real span position, updated pool).
+    Replaces the separate ``paged_prefill`` / ``paged_decode_step`` pair:
+    prefill is span == prompt chunk, decode is span == 1.
+    """
     B, S = tokens.shape
     dtype = _dtype(cfg)
-    pos0 = jnp.zeros((B,), jnp.int32)
     x = L.embed(params["embedding"], tokens, cfg, dtype)
     x, new_pool, _ = decoder_stack_apply(
-        params["decoder"], x, cfg, cache=pool, pos=pos0,
-        page_table=page_table, train=False)
+        params["decoder"], x, cfg, cache=pool, pos=start,
+        page_table=page_table, span_len=span_len, train=False)
     x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
-    idx = (jnp.maximum(lengths, 1) - 1)[:, None, None]
+    idx = (jnp.maximum(span_len, 1) - 1)[:, None, None]
     xl = jnp.take_along_axis(x, idx, axis=1)  # (B,1,d): last real position
     logits = L.unembed(params["embedding"], xl, cfg)
-    return logits[:, 0], new_pool
-
-
-def paged_decode_step(params, tokens: jax.Array, page_table: jax.Array,
-                      pos: jax.Array, pool: dict, cfg: ModelConfig):
-    """One decode step for every slot: writes each token's k/v at ``pos[b]``
-    through the page table, attends over the gathered pages.  Entirely
-    device-side — no host round-trips."""
-    dtype = _dtype(cfg)
-    x = L.embed(params["embedding"], tokens[:, None], cfg, dtype)
-    x, new_pool, _ = decoder_stack_apply(
-        params["decoder"], x, cfg, cache=pool, pos=pos,
-        page_table=page_table, train=False)
-    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
-    logits = L.unembed(params["embedding"], x, cfg)
     return logits[:, 0], new_pool
 
 
 __all__ = [
     "init_params", "forward", "loss_fn",
     "init_decode_cache", "decode_step", "prefill", "prefill_with_cache",
-    "init_paged_pool", "paged_prefill", "paged_decode_step",
+    "init_paged_pool", "paged_mixed_step",
     "decoder_stack_init", "decoder_stack_apply",
     "attn_block_init", "attn_block_apply",
 ]

@@ -1,27 +1,52 @@
-"""Serving runtime: continuous batching with a paged KV cache and
-CIM-cost-aware scheduling.
+"""Serving runtime: unified chunked-prefill + decode iterations over a
+paged KV cache, with CIM-cost-aware scheduling and preemption.
+
+Every engine iteration is ONE mixed forward: each admitted sequence
+contributes a variable-length token span — a prefill chunk, the tail of a
+chunked prompt, or a single decode token — so long prompts never
+head-of-line-block the decode batch and there is no separate prefill pass.
+
+Lifecycle:  WAITING -> PREFILLING -> RUNNING -> FINISHED, with preemption
+sending PREFILLING/RUNNING back to WAITING.  A PREFILLING request's
+``num_computed_tokens`` cursor walks its known tokens in scheduler-sized
+chunks; KV pages are allocated incrementally as the cursor advances (no
+conservative prompt + max_new reservation).  The chunk that reaches the end
+of the known tokens samples the next token on device, and the request
+decodes one token per step from then on.
+
+Preemption contract: when the pool runs dry mid-flight (a mandatory decode
+cannot get its next page, or nothing at all can make progress), the
+lowest-priority — most recently admitted — sequence is evicted back to
+WAITING: its pages are freed, its cursor resets to 0, but its emitted
+tokens and per-request PRNG stream (``resume_key``) are kept.  On
+re-admission (FIFO, from the queue front) the engine recomputes KV over
+``prompt + emitted`` and sampling continues exactly where it left off —
+greedy output is token-identical to an uninterrupted run.
 
 Module map:
-  request.py   — ``Request``/``Sequence`` lifecycle (WAITING -> PREFILL ->
-                 DECODE -> FINISHED), per-request ``SamplingParams``,
-                 streaming ``on_token`` callbacks.
+  request.py   — ``Request``/``Sequence`` lifecycle, the
+                 ``num_computed_tokens`` cursor, per-request
+                 ``SamplingParams``, streaming ``on_token`` callbacks.
   kv_pool.py   — ``PagedKVPool``: fixed-size pages, free-list allocation,
                  per-sequence page tables, fragmentation stats.  Host-side
                  twin of the device pool in
                  ``models.transformer.init_paged_pool``.
-  scheduler.py — ``IterationScheduler``: joins new prefills into the
-                 in-flight decode batch each step under slot/page/latency
-                 budgets; pluggable ``CostModel`` with ``HBMCostModel``
-                 (weight-streaming roofline) and ``CIMCostModel`` (priced by
-                 the paper's CIM simulator — per-token latency/energy from
-                 ``cim.simulator.simulate``).
-  engine.py    — ``ContinuousBatchingEngine`` (batched bucketed prefill,
-                 jitted slot-batch decode with on-device sampling/EOS
-                 masking, lagged token harvest) and the legacy
-                 ``ServeEngine`` compat shim.
+  scheduler.py — ``IterationScheduler.plan_step``: packs prefill chunks
+                 around the in-flight decodes each step under
+                 slot/page/token/latency budgets and decides preemptions;
+                 pluggable ``CostModel`` with ``HBMCostModel``
+                 (weight-streaming roofline, token-scaled prefill) and
+                 ``CIMCostModel`` (priced by the paper's CIM simulator —
+                 per-token latency/energy from ``cim.simulator.simulate``).
+  engine.py    — ``ContinuousBatchingEngine``: ONE jitted mixed step over
+                 (slot, span) with on-device sampling only for spans that
+                 reach their prompt end, lagged token harvest, incremental
+                 page allocation and the preemption/resume machinery; plus
+                 the legacy ``ServeEngine`` compat shim.
 
-The Pallas paged-gather attention kernel lives in ``kernels/paged.py``
-(oracle: ``kernels/ref.py::paged_attention_ref``); enable it with
+The span-aware Pallas paged-gather attention kernel lives in
+``kernels/paged.py`` (oracles: ``kernels/ref.py::paged_attention_span_ref``
+/ ``paged_attention_ref``); enable it with
 ``ContinuousBatchingEngine(..., use_paged_kernel=True)``.
 """
 
@@ -32,4 +57,4 @@ from repro.serving.request import (FinishReason, Request,  # noqa: F401
                                    RequestState, SamplingParams, Sequence)
 from repro.serving.scheduler import (CIMCostModel, CostModel,  # noqa: F401
                                      HBMCostModel, IterationScheduler,
-                                     SchedulerConfig)
+                                     SchedulerConfig, StepPlan)

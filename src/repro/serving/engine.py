@@ -1,22 +1,29 @@
 """Serving engines: continuous batching over the paged KV pool, plus the
 legacy single-batch ``ServeEngine`` kept as a compat shim.
 
-``ContinuousBatchingEngine`` is the tentpole runtime:
+``ContinuousBatchingEngine`` is the tentpole runtime.  Every iteration is
+ONE jitted mixed forward (``models.transformer.paged_mixed_step``): each
+scheduled sequence contributes a variable-length token span — a prefill
+chunk, the tail of a chunked prompt, or a single decode token — so long
+prompts no longer head-of-line-block the decode batch; the scheduler
+(``scheduler.plan_step``) sizes the chunks around the in-flight decodes
+under token/page/latency budgets priced by the cost model.
 
-  * requests join and leave the decode batch between steps (iteration-level
-    scheduling) — no batch restarts, no padding every slot to the longest
-    request;
-  * prompts prefill in ONE batched forward over the padded prompt block
-    (bucketed jit), writing straight into the paged pool;
-  * the decode step is a single jitted slot-batch function: page gather,
-    sampling, token feedback, and position advance all happen on device, so
-    the host never blocks the dispatch chain (the seed engine's
-    ``bool(jnp.all(done))`` per token is gone);
-  * sampled tokens are harvested with a one-step lag: step N+1 is dispatched
-    before step N's results are read back, keeping transfers off the
-    critical path;
-  * admission is priced by a pluggable cost model — see
-    ``scheduler.CIMCostModel`` for the CIM-simulator backend.
+  * requests join and leave the slot batch between steps (iteration-level
+    scheduling) — no batch restarts, no separate prefill forward, no
+    padding every slot to the longest request;
+  * KV pages are allocated incrementally as each sequence's
+    ``num_computed_tokens`` cursor advances — no conservative
+    prompt + max_new reservation.  When the pool runs dry mid-flight the
+    lowest-priority sequence is *preempted* back to WAITING (pages freed,
+    emitted tokens kept, KV recomputed on resume — greedy output is
+    token-identical, and ``resume_key`` keeps sampled runs on their
+    original PRNG stream);
+  * sampling, token feedback and the page-table gather happen on device;
+    only rows whose span reaches the end of their known tokens sample.
+    Sampled tokens are harvested with a one-step lag: step N+1 is
+    dispatched before step N's results are read back, keeping transfers
+    off the critical path (the host never blocks the dispatch chain).
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import itertools
 import math
 from typing import Optional
 
@@ -37,7 +45,7 @@ from repro.serving.kv_pool import PagedKVPool, PoolOOM, SINK_PAGE
 from repro.serving.request import (FinishReason, Request, RequestState,
                                    SamplingParams, Sequence)
 from repro.serving.scheduler import (CostModel, IterationScheduler,
-                                     SchedulerConfig)
+                                     SchedulerConfig, StepPlan)
 
 
 @dataclasses.dataclass
@@ -75,25 +83,31 @@ def _bucket(n: int, lo: int = 1) -> int:
 
 # Module-level jits with the (frozen, hashable) ModelConfig as a static arg:
 # every engine instance of the same config shares one compiled step, so
-# constructing an engine never retraces.
+# constructing an engine never retraces.  The mixed step recompiles only per
+# span bucket (power-of-two padded max span), not per batch composition.
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
-def _decode_step_jit(params, pool, tok, pt, pos, active, temp, keys, *, cfg):
-    logits, pool = T.paged_decode_step(params, tok, pt, pos, pool, cfg)
+def _mixed_step_jit(params, pool, chunk_tok, tok_dev, use_dev, start, span,
+                    pt, sample_mask, temp, keys, *, cfg):
+    """ONE unified engine iteration over the slot batch.
+
+    ``chunk_tok`` (B, S) carries host-known span tokens (prefill chunks);
+    rows flagged ``use_dev`` are decodes whose single input token is the
+    previous step's on-device sample (``tok_dev``), so the dispatch chain
+    never waits on a host readback.  Rows whose span reaches the end of
+    their known tokens (``sample_mask``) draw a token; everyone else keeps
+    their device token and PRNG stream untouched — per-request streams
+    advance only on draws, so chunking never perturbs sampling."""
+    col0 = jnp.where(use_dev, tok_dev, chunk_tok[:, 0])
+    tokens = chunk_tok.at[:, 0].set(col0)
+    logits, pool = T.paged_mixed_step(params, tokens, start, span, pt, pool,
+                                      cfg)
     draw, carry = _split_rows(keys)
     sampled = _sample_rows(logits, temp, draw)
-    tok_new = jnp.where(active, sampled, tok)
-    pos_new = pos + active.astype(jnp.int32)
-    return pool, sampled, tok_new, pos_new, carry
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
-def _prefill_jit(params, pool, tokens, lengths, pt_rows, temp, keys, *, cfg):
-    logits, pool = T.paged_prefill(params, tokens, lengths, pt_rows, pool, cfg)
-    draw, carry = _split_rows(keys)
-    first = _sample_rows(logits, temp, draw)
-    return pool, first, carry
+    tok_new = jnp.where(sample_mask, sampled, tok_dev)
+    keys_new = jnp.where(sample_mask[:, None], carry, keys)
+    return pool, sampled, tok_new, keys_new
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
@@ -112,6 +126,7 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  page_size: int = 16, max_len: int = 512,
                  n_pages: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
                  scheduler_cfg: Optional[SchedulerConfig] = None,
                  cost_model: Optional[CostModel] = None,
                  use_paged_kernel: bool = False,
@@ -125,7 +140,7 @@ class ContinuousBatchingEngine:
             cfg = dataclasses.replace(cfg, paged_kernel=True)
         # decode fast path, applied once at load: exact QKV/gate-up fusion,
         # then per-block int8/int4 quantization of the Monarch factors
-        # (models/decode_path.py).  The jitted steps below consume the
+        # (models/decode_path.py).  The jitted step below consumes the
         # transformed tree unchanged — layers dispatch on the param keys.
         # NOTE on backends: the in-kernel-dequant Pallas path engages when
         # cfg.monarch.backend == "pallas" (the TPU deployment); with the
@@ -157,13 +172,13 @@ class ContinuousBatchingEngine:
         self.pool = T.init_paged_pool(cfg, n_pages, page_size)
         sc = scheduler_cfg or SchedulerConfig()
         sc = dataclasses.replace(sc, max_slots=max_slots)
+        if chunk_size is not None:
+            sc = dataclasses.replace(sc, chunk_size=chunk_size)
         self.scheduler = IterationScheduler(sc, cost_model)
 
         S, MP = max_slots, self.max_pages_per_seq
         self.max_slots = S
         self._tok = jnp.zeros((S,), jnp.int32)
-        self._pos = jnp.zeros((S,), jnp.int32)
-        self._active = jnp.zeros((S,), bool)
         self._temp = jnp.zeros((S,), jnp.float32)
         self._pt = jnp.full((S, MP), SINK_PAGE, jnp.int32)
         self._keys = jnp.zeros((S, 2), jnp.uint32)  # per-request PRNG streams
@@ -171,14 +186,14 @@ class ContinuousBatchingEngine:
         self.waiting: collections.deque[Request] = collections.deque()
         self.running: dict[int, Sequence] = {}          # slot -> Sequence
         self._free_slots = list(range(S - 1, -1, -1))
+        self._pt_dirty: set[int] = set()   # slots whose page table changed
+        self._admit_stamp = itertools.count()           # priority order
         self._pending: list[dict] = []                  # un-harvested steps
         self.step_idx = 0
-        self.stats = {"decode_steps": 0, "prefill_tokens": 0,
-                      "tokens_out": 0, "sim_latency_ns": 0.0,
-                      "sim_energy_nj": 0.0}  # step count: self.step_idx
-        self._decode = functools.partial(_decode_step_jit, cfg=self.cfg)
-        # compiled once per (rows, prompt) bucket, shared across instances
-        self._prefill = functools.partial(_prefill_jit, cfg=self.cfg)
+        self.stats = {"mixed_steps": 0, "decode_tokens": 0,
+                      "prefill_tokens": 0, "tokens_out": 0, "preemptions": 0,
+                      "sim_latency_ns": 0.0, "sim_energy_nj": 0.0}
+        self._mixed = functools.partial(_mixed_step_jit, cfg=self.cfg)
 
     # -- request intake ----------------------------------------------------
 
@@ -195,7 +210,8 @@ class ContinuousBatchingEngine:
                 f"{self.max_len}")
         need = self.pool_host.pages_for(req.max_total_len)
         if need > self.pool_host.n_pages - 1:
-            # would block the FIFO head forever: no pool state can serve it
+            # even alone in the pool it could never finish: no schedule (or
+            # preemption pattern) can serve it
             raise PoolOOM(
                 f"request needs {need} pages; pool has "
                 f"{self.pool_host.n_pages - 1} total")
@@ -209,36 +225,41 @@ class ContinuousBatchingEngine:
     # -- one scheduler iteration -------------------------------------------
 
     def step(self) -> list[Request]:
-        """Dispatch one decode step, harvest the previous one, evict
-        finished sequences, admit new prefills.  Returns requests finished
-        this call."""
+        """Plan and dispatch ONE mixed forward (decode tokens + prefill
+        chunks), harvest the previous one, evict finished sequences.
+        Returns requests finished this call."""
         self.step_idx += 1
         finished: list[Request] = []
 
-        if self.running:
-            finished.extend(self._extend_pages())
-        if self.running:  # dispatch before harvesting: keeps device busy
-            lat, nrg = self.scheduler.step_cost(list(self.running.values()))
-            self.stats["sim_latency_ns"] += lat
-            self.stats["sim_energy_nj"] += nrg
-            self.stats["decode_steps"] += 1
-            (self.pool, sampled, self._tok, self._pos,
-             self._keys) = self._decode(
-                self.params, self.pool, self._tok, self._pt, self._pos,
-                self._active, self._temp, self._keys)
-            for seq in self.running.values():
-                seq.pos_next += 1
-            self._pending.append({
-                "sampled": sampled,
-                "slots": list(self.running.items()),
-            })
+        plan = self._plan()
+        if plan.preemptions:
+            # drain every in-flight step first: a victim's already-dispatched
+            # sample must land (and its PRNG carry settle) before its state
+            # is torn down — then replan, because the drain may have finished
+            # sequences and freed enough pages to avoid evicting anyone
+            while self._pending:
+                finished.extend(self._harvest(self._pending.pop(0)))
+            plan = self._plan()
+            if plan.preemptions:
+                for seq in plan.preemptions:
+                    self._preempt(seq)
+                # replan once more: victims now sit at the queue FRONT, so
+                # admissions are decided against the post-eviction queue (a
+                # victim may even re-join immediately with whatever pages the
+                # mandatory decodes left over).  The packing just proven
+                # feasible still is — no further preemption can be needed.
+                plan = self._plan()
+                assert not plan.preemptions, "preemption did not converge"
+
+        spans = list(plan.spans)
+        spans.extend(self._admit(plan.admissions))
+        if spans:
+            self._dispatch(spans)
 
         # harvest everything but the step just dispatched (one-step lag)
-        keep_last = 1 if self.running else 0
+        keep_last = 1 if spans else 0
         while len(self._pending) > keep_last:
             finished.extend(self._harvest(self._pending.pop(0)))
-
-        finished.extend(self._admit())
         return finished
 
     def run(self) -> list[Request]:
@@ -270,56 +291,122 @@ class ContinuousBatchingEngine:
 
     # -- internals ---------------------------------------------------------
 
-    def _extend_pages(self) -> list[Request]:
-        """Grow prompt-only reservations before the next dispatch writes
-        past them (``reserve_full_output=False``).  With full reservation
-        the page table always covers the write position and this is a
-        no-op.  On a full pool, un-harvested steps are drained first —
-        a sequence that already sampled its final token frees its pages and
-        may itself leave ``running``.  Returns requests finished by that
-        early drain."""
-        updates: list[tuple[int, Sequence, np.ndarray]] = []
-        finished: list[Request] = []
-        for slot, seq in list(self.running.items()):
-            if self.running.get(slot) is not seq:
-                continue  # evicted by a drain below, earlier in this loop
-            needed = seq.pos_next + 1  # tokens covered after this dispatch
-            if self.pool_host.pages_for(needed) <= len(seq.page_ids):
-                continue
-            try:
-                new = self.pool_host.extend(seq.req_id, needed)
-            except PoolOOM:
-                while self._pending:  # harvest may evict + free pages
-                    finished.extend(self._harvest(self._pending.pop(0)))
-                if self.running.get(slot) is not seq:
-                    continue  # the starved sequence was itself finished
-                try:
-                    new = self.pool_host.extend(seq.req_id, needed)
-                except PoolOOM as e:
-                    raise RuntimeError(
-                        "KV pool exhausted mid-decode; preemption is not "
-                        "supported — use reserve_full_output=True or a "
-                        f"larger pool ({e})") from e
-            seq.page_ids.extend(new)
-            row = np.full((self.max_pages_per_seq,), SINK_PAGE, np.int32)
-            row[:len(seq.page_ids)] = seq.page_ids
-            updates.append((slot, seq, row))
-        # a drain may have evicted a sequence after its row was built; its
-        # slot's table already points at the sink and must stay there
-        live = [(s, r) for s, q, r in updates if self.running.get(s) is q]
-        if live:
-            idx = np.asarray([s for s, _ in live])
-            rows = np.stack([r for _, r in live])
+    def _plan(self) -> StepPlan:
+        return self.scheduler.plan_step(
+            list(self.waiting), list(self.running.values()), self.pool_host)
+
+    def _admit(self, admissions: list[tuple[Request, int]]
+               ) -> list[tuple[Sequence, int]]:
+        """Move a FIFO prefix of the waiting queue into slots; their first
+        chunks join this step's spans.  A resumed (preempted) request
+        re-enters here with its emitted tokens folded into the prefill
+        target (recompute-on-resume) and its saved PRNG stream."""
+        spans: list[tuple[Sequence, int]] = []
+        if not admissions:
+            return spans
+        rows, temps, keys = [], [], []
+        for req, chunk in admissions:
+            assert self.waiting[0] is req, "admissions must be a FIFO prefix"
+            self.waiting.popleft()
+            req.state = RequestState.PREFILLING
+            if req.admitted_step < 0:
+                req.admitted_step = self.step_idx
+            target = len(req.known_tokens)
+            pages = self.pool_host.allocate(req.req_id, chunk)
+            slot = self._free_slots.pop()
+            seq = Sequence(request=req, slot=slot, page_ids=pages,
+                           prefill_target=target,
+                           admit_order=next(self._admit_stamp))
+            self.running[slot] = seq
+            self._pt_dirty.add(slot)
+            spans.append((seq, chunk))
+            rows.append(slot)
+            temps.append(req.sampling.temperature)
+            if req.resume_key is not None:
+                keys.append(np.asarray(req.resume_key, np.uint32))
+            else:
+                keys.append(np.asarray(
+                    jax.random.PRNGKey(req.sampling.seed), np.uint32))
+        idx = np.asarray(rows)
+        self._temp = self._temp.at[idx].set(np.asarray(temps, np.float32))
+        self._keys = self._keys.at[idx].set(np.stack(keys))
+        return spans
+
+    def _dispatch(self, spans: list[tuple[Sequence, int]]) -> None:
+        """Grow page tables to cover every span, build the (slot, span)
+        batch, and dispatch the jitted mixed step."""
+        B = self.max_slots
+        Sb = _bucket(max(n for _, n in spans))
+        self.last_span_bucket = Sb  # instrumentation: which jit variant ran
+        chunk_tok = np.zeros((B, Sb), np.int32)
+        start = np.zeros((B,), np.int32)
+        span = np.zeros((B,), np.int32)          # 0 = inert row (sink writes)
+        use_dev = np.zeros((B,), bool)
+        sample = np.zeros((B,), bool)
+        harvest: list[tuple[int, Sequence]] = []
+        n_dec, dec_ctx, prefill_toks = 0, 0, 0
+
+        for seq, n in spans:
+            req = seq.request
+            nc = seq.num_computed
+            new = self.pool_host.extend(req.req_id, nc + n)
+            if new:
+                seq.page_ids.extend(new)
+                self._pt_dirty.add(seq.slot)
+            s = seq.slot
+            start[s] = nc
+            span[s] = n
+            if req.state is RequestState.RUNNING:   # decode: device token
+                use_dev[s] = True
+                sample[s] = True
+                n_dec += 1
+                dec_ctx += nc
+                self.stats["decode_tokens"] += 1
+            else:                                    # prefill chunk
+                toks = req.known_tokens[nc:nc + n]
+                chunk_tok[s, :n] = toks
+                reaches_end = nc + n >= seq.prefill_target
+                sample[s] = reaches_end
+                prefill_toks += n
+                self.stats["prefill_tokens"] += n
+                if reaches_end:
+                    req.state = RequestState.RUNNING
+            req.num_computed_tokens = nc + n
+            self.pool_host.advance(req.req_id, n)
+            if sample[s]:
+                harvest.append((s, seq))
+
+        if self._pt_dirty:
+            rows = np.full((len(self._pt_dirty), self.max_pages_per_seq),
+                           SINK_PAGE, np.int32)
+            idx = np.asarray(sorted(self._pt_dirty))
+            for i, s in enumerate(idx):
+                ids = self.running[s].page_ids
+                rows[i, :len(ids)] = ids
             self._pt = self._pt.at[idx].set(rows)
-        return finished
+            self._pt_dirty.clear()
+
+        lat, nrg = self.scheduler.step_cost(
+            n_dec, (dec_ctx / n_dec) if n_dec else 0.0, prefill_toks)
+        self.stats["sim_latency_ns"] += lat
+        self.stats["sim_energy_nj"] += nrg
+        self.stats["mixed_steps"] += 1
+
+        (self.pool, sampled, self._tok, self._keys) = self._mixed(
+            self.params, self.pool, jnp.asarray(chunk_tok), self._tok,
+            jnp.asarray(use_dev), jnp.asarray(start), jnp.asarray(span),
+            self._pt, jnp.asarray(sample), self._temp, self._keys)
+        self._pending.append({"sampled": sampled, "slots": harvest})
 
     def _harvest(self, entry: dict) -> list[Request]:
         sampled = np.asarray(entry["sampled"])
         finished = []
         for slot, seq in entry["slots"]:
             req = seq.request
-            if req.state is not RequestState.DECODE:
-                continue  # finished by an earlier harvest; stale lag entry
+            if req.state is not RequestState.RUNNING:
+                continue  # finished by an earlier harvest, or preempted
+            if self.running.get(slot) is not seq:
+                continue  # slot was recycled after an eviction
             self._emit(seq, int(sampled[slot]))
             if req.state is RequestState.FINISHED:
                 finished.append(req)
@@ -328,8 +415,6 @@ class ContinuousBatchingEngine:
     def _emit(self, seq: Sequence, token: int) -> None:
         req = seq.request
         req.emit(token)
-        seq.length += 1
-        self.pool_host.advance(req.req_id, 1)
         self.stats["tokens_out"] += 1
         sp = req.sampling
         if sp.eos_id is not None and token == sp.eos_id:
@@ -344,72 +429,28 @@ class ContinuousBatchingEngine:
         self.pool_host.free(seq.req_id)
         self.running.pop(slot)
         self._free_slots.append(slot)
-        self._active = self._active.at[slot].set(False)
+        self._pt_dirty.discard(slot)
         self._pt = self._pt.at[slot].set(SINK_PAGE)
-        self._pos = self._pos.at[slot].set(0)
 
-    def _admit(self) -> list[Request]:
-        """Admit + prefill the scheduler's picks; returns requests that
-        finished on their very first (prefill-sampled) token."""
-        admits = self.scheduler.plan_admissions(
-            list(self.waiting), list(self.running.values()), self.pool_host)
-        if not admits:
-            return []
-        MP = self.max_pages_per_seq
-        rows, slots, lengths, temps, key_rows = [], [], [], [], []
-        seqs: list[Sequence] = []
-        max_prompt = max(r.prompt_len for r in admits)
-        # cap the prompt bucket at the page-table span: padded positions must
-        # stay addressable (beyond-reservation entries resolve to the sink)
-        Sb = min(_bucket(max_prompt), MP * self.page_size)
-        nb = _bucket(len(admits))
-        for req in admits:
-            self.waiting.popleft()
-            req.state = RequestState.PREFILL
-            req.admitted_step = self.step_idx
-            reserve = self.scheduler.cfg.reserve_tokens(req)
-            pages = self.pool_host.allocate(req.req_id, reserve)
-            self.pool_host.advance(req.req_id, req.prompt_len)
-            slot = self._free_slots.pop()
-            seq = Sequence(request=req, slot=slot, page_ids=pages,
-                           length=req.prompt_len, pos_next=req.prompt_len)
-            self.running[slot] = seq
-            seqs.append(seq)
-            slots.append(slot)
-            lengths.append(req.prompt_len)
-            temps.append(req.sampling.temperature)
-            key_rows.append(np.asarray(jax.random.PRNGKey(req.sampling.seed)))
-            rows.append(req.prompt + [0] * (Sb - req.prompt_len))
-        self.stats["prefill_tokens"] += sum(lengths)
-
-        # pad the row dimension to its bucket (padded rows write to the sink)
-        pad = nb - len(admits)
-        tokens = np.asarray(rows + [[0] * Sb] * pad, np.int32)
-        lens = np.asarray(lengths + [1] * pad, np.int32)
-        tmp = np.asarray(temps + [0.0] * pad, np.float32)
-        keys = np.stack(key_rows + [np.zeros(2, np.uint32)] * pad)
-        pt_rows = np.full((nb, MP), SINK_PAGE, np.int32)
-        for i, seq in enumerate(seqs):
-            pt_rows[i, :len(seq.page_ids)] = seq.page_ids
-
-        self.pool, first, carry = self._prefill(
-            self.params, self.pool, jnp.asarray(tokens), jnp.asarray(lens),
-            jnp.asarray(pt_rows), jnp.asarray(tmp), jnp.asarray(keys))
-
-        idx = np.asarray(slots)
-        self._pt = self._pt.at[idx].set(pt_rows[:len(seqs)])
-        self._pos = self._pos.at[idx].set(lens[:len(seqs)])
-        self._temp = self._temp.at[idx].set(tmp[:len(seqs)])
-        self._active = self._active.at[idx].set(True)
-        self._tok = self._tok.at[idx].set(first[:len(seqs)])
-        self._keys = self._keys.at[idx].set(carry[:len(seqs)])
-
-        first_host = np.asarray(first)
-        for i, seq in enumerate(seqs):
-            seq.request.state = RequestState.DECODE
-            self._emit(seq, int(first_host[i]))
-        return [s.request for s in seqs
-                if s.request.state is RequestState.FINISHED]
+    def _preempt(self, seq: Sequence) -> None:
+        """Evict a PREFILLING/RUNNING sequence back to WAITING: pages freed,
+        cursor reset (KV is gone — recompute on resume), emitted tokens and
+        the per-request PRNG stream kept.  The victim rejoins at the FRONT
+        of the queue so FIFO admission resumes it as soon as pages free up."""
+        req = seq.request
+        # the harvest drain ran before any preemption, so _keys[slot] is the
+        # settled post-draw carry — sampling resumes mid-stream on re-admit
+        req.resume_key = np.asarray(self._keys[seq.slot])
+        self.pool_host.free(req.req_id)
+        self.running.pop(seq.slot)
+        self._free_slots.append(seq.slot)
+        self._pt_dirty.discard(seq.slot)
+        self._pt = self._pt.at[seq.slot].set(SINK_PAGE)
+        req.num_computed_tokens = 0
+        req.state = RequestState.WAITING
+        req.num_preemptions += 1
+        self.stats["preemptions"] += 1
+        self.waiting.appendleft(req)
 
 
 class ServeEngine:

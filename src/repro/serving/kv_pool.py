@@ -121,6 +121,8 @@ class PagedKVPool:
         self._lengths[seq_id] += n_tokens
 
     def free(self, seq_id: int) -> None:
+        if seq_id not in self._tables:
+            raise KeyError(f"free of unknown sequence {seq_id}")
         pages = self._tables.pop(seq_id)
         self._lengths.pop(seq_id)
         self._free.extend(reversed(pages))

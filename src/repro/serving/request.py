@@ -3,10 +3,26 @@
 A ``Request`` is the user-facing handle: prompt, per-request sampling
 params, streamed output tokens, and a state machine
 
-    WAITING -> PREFILL -> DECODE -> FINISHED
+    WAITING -> PREFILLING -> RUNNING -> FINISHED
+       ^            |           |
+       +-- preempt -+-----------+
 
-``Sequence`` is the scheduled unit: the slot index in the decode batch, the
-sequence's page allocation, and its running length.  One request owns
+Every engine iteration is one mixed forward, so there is no separate
+prefill pass: an admitted request is PREFILLING while its
+``num_computed_tokens`` cursor walks the known tokens in scheduler-sized
+chunks (pages are allocated as the cursor advances), and becomes RUNNING
+when the cursor reaches the end — the chunk that gets there also samples
+the next token, after which the request contributes one decode token per
+step.
+
+Preemption sends a PREFILLING/RUNNING request back to WAITING: its pages
+are freed and the cursor resets to 0, but the tokens it already emitted are
+kept — on re-admission the engine recomputes KV over ``prompt + emitted``
+(recompute-on-resume) and sampling continues exactly where it left off
+(``resume_key`` carries the per-request PRNG stream across the eviction).
+
+``Sequence`` is the scheduled unit: the slot index in the batch, the
+sequence's page allocation, and its prefill target.  One request owns
 exactly one sequence (beam/parallel sampling would fan a request out into
 several; that is future work, see ROADMAP).
 """
@@ -20,10 +36,10 @@ from typing import Callable, Optional
 
 
 class RequestState(enum.Enum):
-    WAITING = "waiting"    # queued, no pages, no slot
-    PREFILL = "prefill"    # admitted this step: pages allocated, prompt runs
-    DECODE = "decode"      # in the decode batch, one token per engine step
-    FINISHED = "finished"  # eos / length cap reached; slot + pages released
+    WAITING = "waiting"        # queued or preempted: no pages, no slot
+    PREFILLING = "prefilling"  # in a slot; prompt chunks streaming in
+    RUNNING = "running"        # prefill done, one decode token per step
+    FINISHED = "finished"      # eos / length cap reached; slot + pages freed
 
 
 class FinishReason(enum.Enum):
@@ -53,6 +69,14 @@ class Request:
     state: RequestState = RequestState.WAITING
     output_tokens: list[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[FinishReason] = None
+    # prefill cursor: tokens of ``known_tokens`` whose KV is in the pool.
+    # Advances chunk by chunk while PREFILLING; resets to 0 on preemption
+    # (pages freed -> recompute on resume).
+    num_computed_tokens: int = 0
+    num_preemptions: int = 0
+    # per-request PRNG stream captured at preemption ((2,) uint32), so a
+    # resumed sampled request draws the same continuation it would have
+    resume_key: Optional[object] = None
     # iteration indices, for per-request latency accounting
     arrived_step: int = -1
     admitted_step: int = -1
@@ -68,8 +92,15 @@ class Request:
 
     @property
     def max_total_len(self) -> int:
-        """Worst-case token footprint, used for page reservation."""
+        """Worst-case token footprint (page-reservation upper bound)."""
         return len(self.prompt) + self.sampling.max_new_tokens
+
+    @property
+    def known_tokens(self) -> list[int]:
+        """Every token whose value is already known: the prompt plus tokens
+        emitted before a preemption.  This is what PREFILLING (re)computes;
+        the chunk that reaches its end samples the next new token."""
+        return self.prompt + self.output_tokens
 
     def emit(self, token: int) -> None:
         self.output_tokens.append(token)
@@ -84,17 +115,37 @@ class Request:
 
 @dataclasses.dataclass
 class Sequence:
-    """One scheduled sequence: slot + pages + running length."""
+    """One scheduled sequence: slot + pages + prefill target.
+
+    ``prefill_target`` is ``len(request.known_tokens)`` frozen at admission:
+    the cursor position at which PREFILLING flips to RUNNING.  The write
+    cursor itself lives on the request (``num_computed_tokens``) so it
+    survives the sequence being torn down by preemption.
+    """
 
     request: Request
     slot: int
     page_ids: list[int]    # physical pages, in logical order
-    length: int            # tokens emitted + prompt (host view)
-    pos_next: int = 0      # device write position of the NEXT decode dispatch
+    prefill_target: int    # known tokens to (re)compute before decoding
+    admit_order: int = 0   # monotonic admission stamp: lower = higher priority
 
     @property
     def req_id(self) -> int:
         return self.request.req_id
+
+    @property
+    def num_computed(self) -> int:
+        """Tokens whose KV is in the pool == the next device write position."""
+        return self.request.num_computed_tokens
+
+    @property
+    def remaining_prefill(self) -> int:
+        return max(0, self.prefill_target - self.num_computed)
+
+    @property
+    def length(self) -> int:
+        """Live context tokens (cost models price attention against this)."""
+        return self.num_computed
 
 
 __all__ = ["Request", "RequestState", "FinishReason", "SamplingParams",

@@ -1,30 +1,46 @@
-"""Iteration-level admission scheduler with a pluggable step-cost model.
+"""Iteration-level scheduler: every engine step is ONE mixed forward, and
+the scheduler decides the token span each sequence contributes to it.
 
-Every engine step the scheduler decides which WAITING requests join the
-in-flight decode batch (continuous batching: joins and evictions happen
-between steps, never by restarting the batch).  Admission is bounded by
+``plan_step`` packs the step under four budgets:
 
-  * free decode slots (static batch width of the jitted step),
-  * free KV pages (conservative reservation: prompt + max_new_tokens, so an
-    admitted sequence can never OOM mid-flight — preemption is future work),
-  * a per-step prefill token budget (head-of-line blocking control),
-  * optionally, a step-latency budget priced by the cost model.
+  * decode spans are mandatory — every RUNNING sequence gets 1 token (plus
+    the KV page that token needs, allocated incrementally as the cursor
+    crosses page boundaries);
+  * PREFILLING sequences get a prompt chunk of up to ``chunk_size`` tokens,
+    shrunk to whatever free pages remain (a sequence that gets 0 simply
+    stalls this step — its pages stay warm);
+  * WAITING requests are admitted FIFO into free slots, contributing their
+    first chunk this very step (there is no separate prefill forward);
+  * an optional step-latency budget priced by the cost model bounds how
+    much prefill work rides along with the decode batch.
+
+Because pages are allocated as each cursor advances (no conservative
+prompt + max_new reservation), the pool can run dry mid-flight.  The plan
+then *preempts*: the lowest-priority (most recently admitted)
+PREFILLING/RUNNING sequence is evicted back to WAITING — pages freed,
+emitted tokens kept, KV recomputed on resume — and planning retries with
+the reclaimed pages.  Preemption also fires when nothing at all could be
+scheduled (liveness): the victim's pages let the highest-priority stalled
+sequence make progress.
 
 Two cost models ship:
 
 ``HBMCostModel`` — the classic weight-streaming roofline: one step reads
 every weight byte once (amortized over the whole batch) plus each
 sequence's KV history, so marginal decode cost per extra sequence is tiny
-and the scheduler batches as wide as it can.
+and the scheduler batches as wide as it can.  Prefill pays the weight pass
+plus per-token compute, so longer chunks genuinely cost more and the
+latency budget binds on chunk size.
 
 ``CIMCostModel`` — prices the step with the paper's CIM simulator
 (``cim.simulator.simulate`` over ``cim.workload.decode_workload``): weights
 are *stationary* in the arrays, so there is no weight-read amortization —
-each sequence bit-serially streams its activations through the same DAC/ADC
-cycles and per-step latency grows ~linearly with batch size.  Under a
-latency SLO this makes the CIM scheduler admit *fewer* concurrent decodes
-than the HBM heuristic would — batch composition driven by simulated
-per-token latency/energy, which is exactly the point of the hook.
+each token bit-serially streams its activations through the same DAC/ADC
+cycles and per-step latency grows ~linearly with the tokens in the step.
+Under a latency SLO this makes the CIM scheduler interleave *smaller*
+prefill chunks into the decode batch than the HBM heuristic would — batch
+composition driven by simulated per-token latency/energy, which is exactly
+the knob the paper's framework exposes.
 """
 
 from __future__ import annotations
@@ -33,7 +49,7 @@ import dataclasses
 from typing import Optional, Protocol, Sequence as Seq
 
 from repro.serving.kv_pool import PagedKVPool
-from repro.serving.request import Request, Sequence
+from repro.serving.request import Request, RequestState, Sequence
 
 
 class CostModel(Protocol):
@@ -49,6 +65,10 @@ class CostModel(Protocol):
         """Predicted energy of one decode step (0 if not modeled)."""
         ...
 
+    def prefill_nj(self, n_tokens: int) -> float:
+        """Predicted energy of prefilling ``n_tokens`` (0 if not modeled)."""
+        ...
+
 
 @dataclasses.dataclass
 class HBMCostModel:
@@ -58,6 +78,7 @@ class HBMCostModel:
     kv_bytes_per_token: float     # 2 * n_layers * n_kv_heads * hd * dtype
     bytes_per_param: float = 2.0
     bandwidth_gbps: float = 400.0
+    compute_gflops: float = 50_000.0   # prefill matmul throughput
 
     def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
         weight_bytes = self.n_params * self.bytes_per_param
@@ -65,10 +86,17 @@ class HBMCostModel:
         return (weight_bytes + kv_bytes) / self.bandwidth_gbps
 
     def prefill_ns(self, n_tokens: int) -> float:
-        # prefill is compute-bound; approximate with one weight pass
-        return self.n_params * self.bytes_per_param / self.bandwidth_gbps
+        # one weight pass (amortized over the chunk) + per-token compute:
+        # the cost must grow with the token count or a chunk-size budget
+        # never binds (2 flops per param per token, GFLOP/s == flops/ns)
+        weight_ns = self.n_params * self.bytes_per_param / self.bandwidth_gbps
+        compute_ns = 2.0 * self.n_params * n_tokens / self.compute_gflops
+        return weight_ns + compute_ns
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
+        return 0.0
+
+    def prefill_nj(self, n_tokens: int) -> float:
         return 0.0
 
     @classmethod
@@ -134,79 +162,197 @@ class CIMCostModel:
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
         return n_seqs * self.per_token_nj
 
+    def prefill_nj(self, n_tokens: int) -> float:
+        # CIM prices every token streamed through the arrays, prefill or
+        # decode alike — chunk composition shows up in energy, not just time
+        return n_tokens * self.per_token_nj
+
 
 @dataclasses.dataclass
 class SchedulerConfig:
-    max_slots: int = 8                 # decode-batch width of the jitted step
-    max_prefill_tokens: int = 2048     # prompt tokens admitted per step
+    max_slots: int = 8            # slot-batch width of the jitted mixed step
+    chunk_size: int = 64          # max prefill tokens one sequence gets/step
+    max_step_tokens: int = 2048   # total span tokens per step (decode+chunks)
     step_latency_budget_ns: Optional[float] = None
-    # True: pages for prompt + max_new reserved up front (can never OOM
-    # mid-flight).  False: prompt-only reservation, pages appended as decode
-    # crosses page boundaries — denser packing, but a full pool mid-decode
-    # is a hard error (preemption is future work).
-    reserve_full_output: bool = True
 
-    def reserve_tokens(self, req: Request) -> int:
-        """Token span to reserve pages for at admission.  The single source
-        of truth — the engine's allocate must match plan_admissions."""
-        return req.max_total_len if self.reserve_full_output else req.prompt_len
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine iteration, fully decided.
+
+    ``spans``: (sequence, n_tokens) for already-admitted sequences, priority
+    order — 1 for RUNNING decodes, a chunk for PREFILLING.  ``admissions``:
+    (request, first_chunk) for WAITING requests joining this step (a FIFO
+    prefix of the queue).  ``preemptions``: sequences to evict back to
+    WAITING *before* executing the spans, lowest priority first; their spans
+    do not appear in ``spans``.
+    """
+
+    spans: list[tuple[Sequence, int]] = dataclasses.field(default_factory=list)
+    admissions: list[tuple[Request, int]] = dataclasses.field(
+        default_factory=list)
+    preemptions: list[Sequence] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_decodes(self) -> int:
+        return sum(1 for s, _ in self.spans
+                   if s.request.state is RequestState.RUNNING)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return (sum(n for s, n in self.spans
+                    if s.request.state is RequestState.PREFILLING)
+                + sum(n for _, n in self.admissions))
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(n for _, n in self.spans) + sum(
+            n for _, n in self.admissions)
 
 
 class IterationScheduler:
-    """FIFO admission under slot / page / prefill / latency budgets."""
+    """Packs decode tokens + prefill chunks into one mixed step under
+    slot / page / token / latency budgets, preempting on page pressure."""
 
     def __init__(self, cfg: SchedulerConfig,
                  cost_model: Optional[CostModel] = None):
         self.cfg = cfg
         self.cost_model = cost_model
 
-    def plan_admissions(self, waiting: Seq[Request], running: Seq[Sequence],
-                        pool: PagedKVPool) -> list[Request]:
-        """Pick the prefix of the waiting queue that joins this step.
+    # -- planning ------------------------------------------------------------
 
-        Strict FIFO: the first request that does not fit stops admission
-        (no skip-ahead, no starvation).
+    def plan_step(self, waiting: Seq[Request], running: Seq[Sequence],
+                  pool: PagedKVPool) -> StepPlan:
+        """Decide this iteration's spans, admissions and preemptions.
+
+        Preemption loop: try to pack with the current residents; if a
+        mandatory decode cannot get its next page, or nothing at all can be
+        scheduled while work exists, evict the lowest-priority resident
+        (most recent ``admit_order``) and retry with its pages reclaimed.
         """
-        admits: list[Request] = []
-        free_slots = self.cfg.max_slots - len(running)
-        pages_left = pool.free_pages
-        prefill_toks = 0
-        n = len(running)
-        avg_ctx = (sum(s.length for s in running) / n) if n else 0.0
+        order = sorted(running, key=lambda s: s.admit_order)
+        preempted: list[Sequence] = []
+        extra_pages = 0
+        while True:
+            cand = order[:len(order) - len(preempted)]
+            plan = self._pack(waiting, cand, pool, extra_pages)
+            if plan is not None:
+                # already lowest-priority-first (victims were taken from the
+                # back): the engine appendlefts in this order, so an OLDER
+                # victim ends up ahead of a younger one in the queue
+                plan.preemptions = list(preempted)
+                return plan
+            if not cand:
+                raise RuntimeError(
+                    "nothing schedulable with an empty batch — the pool "
+                    "cannot host a single chunk (pool too small)")
+            victim = cand[-1]
+            preempted.append(victim)
+            extra_pages += len(victim.page_ids)
+
+    def _pack(self, waiting: Seq[Request], cand: list[Sequence],
+              pool: PagedKVPool, extra_pages: int) -> Optional[StepPlan]:
+        """One packing attempt over ``cand`` (priority order).  Returns None
+        when packing needs a preemption: a decode span is page-starved, or
+        zero tokens were scheduled while residents exist."""
+        cfg = self.cfg
+        free = pool.free_pages + extra_pages
+        budget = cfg.max_step_tokens
+        plan = StepPlan()
+
+        # 1. mandatory decodes: every RUNNING sequence advances one token
+        decodes = [s for s in cand if s.request.state is RequestState.RUNNING]
+        n_ctx = sum(s.length for s in decodes)
+        for seq in decodes:
+            need = pool.pages_for(seq.num_computed + 1) - len(seq.page_ids)
+            if need > free:
+                return None  # page-starved decode: preempt and retry
+            free -= need
+            budget -= 1
+            plan.spans.append((seq, 1))
+        n_dec = len(decodes)
+        avg_ctx = (n_ctx / n_dec) if n_dec else 0.0
+
+        # 2. prefill chunks for resident PREFILLING sequences, priority order
+        for seq in cand:
+            if seq.request.state is not RequestState.PREFILLING:
+                continue
+            chunk = self._chunk_for(seq.remaining_prefill, budget, free,
+                                    len(seq.page_ids) * pool.page_size
+                                    - seq.num_computed, pool.page_size,
+                                    plan, n_dec, avg_ctx)
+            if chunk <= 0:
+                continue  # stalls this step; pages stay warm
+            need = pool.pages_for(seq.num_computed + chunk) \
+                - len(seq.page_ids)
+            free -= need
+            budget -= chunk
+            plan.spans.append((seq, chunk))
+
+        # 3. FIFO admissions into free slots, first chunk rides this step
+        free_slots = cfg.max_slots - len(cand)
         for req in waiting:
             if free_slots <= 0:
                 break
-            need = pool.pages_for(self.cfg.reserve_tokens(req))
-            if need > pages_left:
-                break
-            if admits and prefill_toks + req.prompt_len > self.cfg.max_prefill_tokens:
-                break  # always let at least one prefill through
-            if (self.cost_model is not None
-                    and self.cfg.step_latency_budget_ns is not None
-                    and n > 0):
-                # the admission step pays this request's prefill on top of
-                # the widened decode batch
-                projected = (
-                    self.cost_model.decode_step_ns(n + 1, avg_ctx)
-                    + self.cost_model.prefill_ns(prefill_toks + req.prompt_len))
-                if projected > self.cfg.step_latency_budget_ns:
-                    break
-            admits.append(req)
+            target = len(req.prompt) + len(req.output_tokens)
+            chunk = self._chunk_for(target, budget, free, 0, pool.page_size,
+                                    plan, n_dec, avg_ctx)
+            if chunk <= 0:
+                break  # strict FIFO: no skip-ahead, no starvation
+            free -= pool.pages_for(chunk)
+            budget -= chunk
             free_slots -= 1
-            pages_left -= need
-            prefill_toks += req.prompt_len
-            n += 1
-        return admits
+            plan.admissions.append((req, chunk))
 
-    def step_cost(self, running: Seq[Sequence]) -> tuple[float, float]:
-        """(latency_ns, energy_nj) estimate for the current decode batch."""
-        if self.cost_model is None or not running:
+        if plan.total_tokens == 0 and cand:
+            return None  # residents exist but none can move: preempt
+        return plan
+
+    def _chunk_for(self, remaining: int, budget: int, free_pages: int,
+                   slack_tokens: int, page_size: int, plan: StepPlan,
+                   n_dec: int, avg_ctx: float) -> int:
+        """Largest prefill chunk for one sequence under the chunk / step-token
+        / page / latency budgets.  ``slack_tokens`` is the headroom already
+        covered by the sequence's allocated pages (0 for a fresh admission)."""
+        chunk = min(self.cfg.chunk_size, remaining, max(budget, 0))
+        # shrink to the pages actually available
+        chunk = min(chunk, slack_tokens + free_pages * page_size)
+        if chunk <= 0:
+            return 0
+        if (self.cost_model is not None
+                and self.cfg.step_latency_budget_ns is not None
+                and plan.total_tokens > 0):
+            # this chunk rides on top of the decode batch + earlier chunks;
+            # shrink until the priced step fits (a step that contains nothing
+            # else skips the check — minimum progress beats the SLO)
+            base = plan.prefill_tokens
+            while chunk > 0:
+                projected = self.cost_model.prefill_ns(base + chunk)
+                if n_dec:
+                    projected += self.cost_model.decode_step_ns(n_dec, avg_ctx)
+                if projected <= self.cfg.step_latency_budget_ns:
+                    break
+                chunk //= 2
+        return chunk
+
+    # -- accounting -----------------------------------------------------------
+
+    def step_cost(self, n_decodes: int, avg_ctx: float,
+                  prefill_tokens: int) -> tuple[float, float]:
+        """(latency_ns, energy_nj) estimate for one executed mixed step."""
+        if self.cost_model is None:
             return (0.0, 0.0)
-        n = len(running)
-        avg_ctx = sum(s.length for s in running) / n
-        return (self.cost_model.decode_step_ns(n, avg_ctx),
-                self.cost_model.decode_step_nj(n, avg_ctx))
+        lat, nrg = 0.0, 0.0
+        if n_decodes:
+            lat += self.cost_model.decode_step_ns(n_decodes, avg_ctx)
+            nrg += self.cost_model.decode_step_nj(n_decodes, avg_ctx)
+        if prefill_tokens:
+            lat += self.cost_model.prefill_ns(prefill_tokens)
+            # getattr: third-party cost models predate prefill energy
+            nrg += getattr(self.cost_model, "prefill_nj",
+                           lambda n: 0.0)(prefill_tokens)
+        return (lat, nrg)
 
 
 __all__ = ["CostModel", "HBMCostModel", "CIMCostModel", "SchedulerConfig",
-           "IterationScheduler"]
+           "StepPlan", "IterationScheduler"]
