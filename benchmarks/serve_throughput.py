@@ -1,5 +1,5 @@
 """Serving throughput: the unified mixed-step engine vs the seed path, plus
-a chunked-prefill sweep.
+a chunked-prefill sweep and a shared-prefix (prefix-cache) sweep.
 
 Part 1 (throughput): decode tokens/s at increasing concurrency.  The
 baseline processes the same request set the way the seed engine did — one
@@ -19,11 +19,24 @@ decode p95 spikes; with bounded chunks it amortizes.  The tight-pool cells
 force mid-flight preemption (counted in the row) and still assert
 token-identical greedy output.
 
+Part 3 (prefix sweep): prefix length x concurrency, prefix sharing on vs
+off, under both HBM and CIM cost models.  One warm-up request populates the
+refcounted prefix trie, then N concurrent requests sharing its system
+prompt arrive together: with sharing they acquire the committed pages by
+refcount (COW-forking the partial tail) and compute only their private
+tails; without sharing each recomputes and re-stores the whole prefix.
+Reports pages actually allocated and prefill tokens actually computed —
+greedy outputs are asserted identical across sharing on/off.
+
 Emits BENCH_serving.json:
   {"results": [{"concurrency": N, "baseline_tok_s": ..., ...}, ...],
    "chunked": [{"cost_model": "hbm", "chunk": 16, "pool": "tight",
                 "decode_p50_ms": ..., "decode_p95_ms": ...,
                 "preemptions": ..., ...}, ...],
+   "prefix": [{"cost_model": "hbm", "prefix_len": 128, "concurrency": 8,
+               "pages_allocated": {"shared": ..., "exclusive": ...},
+               "prefill_tokens": {"shared": ..., "exclusive": ...},
+               "page_reduction": ..., "prefill_reduction": ..., ...}, ...],
    "outputs_match": true}
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
@@ -245,6 +258,86 @@ def run_chunk_sweep(params, *, chunk_sizes, prompt_len, new_tokens,
     return rows, all_match
 
 
+def run_prefix_sweep(params, *, prefix_lens, concurrencies, new_tokens,
+                     cost_models, tail_len=8):
+    """Prefix length x concurrency x sharing on/off.  A finished warm-up
+    request leaves the system prompt's pages cached in the trie; the
+    concurrent burst then measures how many pages / prefill tokens the
+    sharing path avoids.  Token-identical greedy outputs asserted."""
+    rows = []
+    all_match = True
+    for cm_name in cost_models:
+        if cm_name == "hbm":
+            cost = HBMCostModel.from_model_config(CFG)
+        else:
+            cost = CIMCostModel(CFG, strategy="sparse", seq_len=128)
+        for plen in prefix_lens:
+            sysp = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(7), (plen,), 0, CFG.vocab))
+            max_len = plen + tail_len + new_tokens + 8
+            for n in concurrencies:
+                prompts = [np.concatenate([sysp, np.asarray(
+                    jax.random.randint(jax.random.PRNGKey(500 + i),
+                                       (tail_len,), 0, CFG.vocab))])
+                    for i in range(n)]
+                gen = SamplingParams(max_new_tokens=new_tokens)
+                per = {}
+                outs = {}
+                for mode, sharing in (("shared", True), ("exclusive", False)):
+                    eng = ContinuousBatchingEngine(
+                        CFG, params, max_slots=n, page_size=16,
+                        max_len=max_len, cost_model=cost,
+                        prefix_sharing=sharing)
+                    # warm-up request: commits (or not) the prefix pages
+                    eng.add_request(np.asarray(sysp),
+                                    SamplingParams(max_new_tokens=2))
+                    eng.run()
+                    warm_pages = eng.pool_host.pages_allocated_total
+                    warm_prefill = eng.stats["prefill_tokens"]
+                    reqs = [eng.add_request(p, gen) for p in prompts]
+                    t0 = time.perf_counter()
+                    eng.run()
+                    wall = time.perf_counter() - t0
+                    eng.pool_host.check_invariants()
+                    per[mode] = {
+                        "pages": eng.pool_host.pages_allocated_total
+                        - warm_pages,
+                        "prefill": eng.stats["prefill_tokens"]
+                        - warm_prefill,
+                        "hit_tokens": eng.stats["prefix_hit_tokens"],
+                        "cow_forks": eng.stats["cow_forks"],
+                        "tok_s": eng.stats["tokens_out"] / wall,
+                    }
+                    outs[mode] = [r.output_tokens for r in reqs]
+                match = outs["shared"] == outs["exclusive"]
+                all_match &= match
+                row = {
+                    "cost_model": cm_name, "prefix_len": plen,
+                    "concurrency": n,
+                    "pages_allocated": {m: per[m]["pages"] for m in per},
+                    "prefill_tokens": {m: per[m]["prefill"] for m in per},
+                    "page_reduction": per["exclusive"]["pages"]
+                    / max(per["shared"]["pages"], 1),
+                    "prefill_reduction": per["exclusive"]["prefill"]
+                    / max(per["shared"]["prefill"], 1),
+                    "hit_tokens": per["shared"]["hit_tokens"],
+                    "cow_forks": per["shared"]["cow_forks"],
+                    "tok_s_shared": per["shared"]["tok_s"],
+                    "tok_s_exclusive": per["exclusive"]["tok_s"],
+                    "outputs_match": match,
+                }
+                rows.append(row)
+                print(f"  [{cm_name}] prefix={plen:4d} conc={n}: pages "
+                      f"{per['exclusive']['pages']:3d} -> "
+                      f"{per['shared']['pages']:3d} "
+                      f"({row['page_reduction']:.1f}x), prefill "
+                      f"{per['exclusive']['prefill']:4d} -> "
+                      f"{per['shared']['prefill']:4d} "
+                      f"({row['prefill_reduction']:.1f}x), "
+                      f"forks={row['cow_forks']} match={match}")
+    return rows, all_match
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -263,6 +356,12 @@ def main():
             params, chunk_sizes=(8, "full"), prompt_len=24,
             new_tokens=new_tokens, n_requests=4, max_slots=2,
             cost_models=("hbm",))
+        print("prefix sweep (smoke):")
+        # 120 is deliberately NOT page-aligned (page_size 16): the warm-up
+        # commits a partial tail page, so every burst request COW-forks it
+        prefix, m3 = run_prefix_sweep(
+            params, prefix_lens=(120, 128), concurrencies=(8,),
+            new_tokens=new_tokens, cost_models=("hbm",))
     else:
         results, m1 = run_throughput(params, (1, 2, 4, 8), prompt_len=16,
                                      new_tokens=args.new_tokens)
@@ -271,14 +370,34 @@ def main():
             params, chunk_sizes=(16, 64, "full"), prompt_len=48,
             new_tokens=args.new_tokens, n_requests=6, max_slots=4,
             cost_models=("hbm", "cim"))
-    all_match = m1 and m2
+        print("prefix sweep:")
+        prefix, m3 = run_prefix_sweep(
+            params, prefix_lens=(32, 120, 128), concurrencies=(2, 8),
+            new_tokens=args.new_tokens, cost_models=("hbm", "cim"))
+    all_match = m1 and m2 and m3
     payload = {"bench": "serving_throughput", "smoke": args.smoke,
-               "results": results, "chunked": chunked,
+               "results": results, "chunked": chunked, "prefix": prefix,
                "outputs_match": all_match}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
     assert all_match, "continuous outputs diverged from the baseline"
+    # acceptance: >= 2x fewer pages AND prefill tokens at 8 concurrent
+    # requests sharing a 128-token prefix
+    accept = [r for r in prefix
+              if r["prefix_len"] == 128 and r["concurrency"] == 8]
+    for r in accept:
+        assert r["page_reduction"] >= 2.0, r
+        assert r["prefill_reduction"] >= 2.0, r
+    # the unaligned prefix must exercise the COW fork path (partial-tail
+    # match), or the headline copy-on-write feature runs cold in CI
+    for r in prefix:
+        if r["prefix_len"] % 16:
+            assert r["cow_forks"] >= 1, r
+    if accept:
+        r = accept[0]
+        print(f"prefix sharing at 128x8: {r['page_reduction']:.1f}x fewer "
+              f"pages, {r['prefill_reduction']:.1f}x fewer prefill tokens")
     at8 = [r for r in results if r["concurrency"] == 8]
     if at8:
         print(f"speedup at 8 concurrent: {at8[0]['speedup']:.2f}x")

@@ -7,7 +7,13 @@ scheduler/pool statistics — pool occupancy, preemption counts, and the CIM
 cost model's simulated latency/energy when ``--cost-model cim`` is
 selected.  ``--chunk-size`` bounds how many prompt tokens one sequence may
 prefill per mixed step; ``--preempt`` shrinks the page pool so sequences
-are forcibly evicted (and transparently resumed) mid-flight.
+are forcibly evicted (and transparently resumed) mid-flight;
+``--system-prompt N`` prepends the same synthetic N-token system prompt to
+every request, demonstrating refcounted prefix sharing: later arrivals
+match the pages the first request committed to the prefix trie and skip
+recomputing (and re-storing) the shared prefix — the exit report prints
+pages saved and prefill tokens skipped.  ``--no-prefix-sharing`` turns the
+trie off for comparison.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--arch mamba2-2_7b]
       (SSM/hybrid archs fall back to the legacy single-batch engine)
@@ -37,6 +43,11 @@ def main():
     ap.add_argument("--preempt", action="store_true",
                     help="shrink the page pool so mid-flight preemption "
                          "(evict + recompute-on-resume) actually fires")
+    ap.add_argument("--system-prompt", type=int, default=0, metavar="N",
+                    help="shared synthetic N-token system prompt: requests "
+                         "share its KV pages via the prefix trie")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the refcounted prefix trie (baseline)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--cost-model", choices=["none", "hbm", "cim"],
                     default="cim")
@@ -79,19 +90,22 @@ def main():
               f"{cost.per_token_nj:.0f} nJ/token (sparse mapping, "
               f"{wbits}-bit cells)")
 
+    max_len = 64 + args.system_prompt
     n_pages = None
     if args.preempt:
         # barely more than one worst-case request: concurrent sequences must
         # fight for pages and the loser is evicted + resumed
-        per_req = -(-(20 + args.new_tokens) // args.page_size)
+        per_req = -(-(20 + args.system_prompt + args.new_tokens)
+                    // args.page_size)
         n_pages = 1 + per_req + 1
     engine = ContinuousBatchingEngine(
         cfg, params, max_slots=args.max_slots, page_size=args.page_size,
-        max_len=64, n_pages=n_pages, cost_model=cost,
+        max_len=max_len, n_pages=n_pages, cost_model=cost,
         scheduler_cfg=SchedulerConfig(chunk_size=args.chunk_size,
                                       max_step_tokens=64),
         use_paged_kernel=args.paged_kernel,
-        quantize=args.quantize, fuse_projections=args.fuse)
+        quantize=args.quantize, fuse_projections=args.fuse,
+        prefix_sharing=not args.no_prefix_sharing)
     if args.cost_model == "hbm":
         # price weight traffic by the tree the engine actually serves
         # (post fuse/quantize), not the fp32 default
@@ -108,10 +122,12 @@ def main():
                   "pass through unquantized")
 
     rng = np.random.default_rng(1)
+    sys_prompt = rng.integers(0, cfg.vocab, size=args.system_prompt)
     finished = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 20))
-        prompt = rng.integers(0, cfg.vocab, size=plen)
+        prompt = np.concatenate(
+            [sys_prompt, rng.integers(0, cfg.vocab, size=plen)])
         engine.add_request(
             prompt,
             SamplingParams(max_new_tokens=args.new_tokens,
@@ -125,7 +141,8 @@ def main():
         ps = engine.pool_host.stats()
         print(f"  step {engine.step_idx:3d} pool: "
               f"{ps.allocated_pages}/{ps.n_pages} pages allocated "
-              f"({ps.utilization * 100:.0f}% utilized), "
+              f"({ps.shared_pages} shared, {ps.cached_pages} cached, "
+              f"{ps.utilization * 100:.0f}% utilized), "
               f"{engine.stats['preemptions']} preemptions so far")
 
     finished.extend(engine.run())
@@ -142,7 +159,15 @@ def main():
           f"preemptions={s['preemptions']}")
     ps = engine.pool_host.stats()
     print(f"pool at exit: {ps.allocated_pages}/{ps.n_pages} pages allocated, "
-          f"{ps.free_pages} free")
+          f"{ps.free_pages} free, {ps.cached_pages} cached for reuse")
+    if args.system_prompt and not args.no_prefix_sharing:
+        pool = engine.pool_host
+        naive = sum(pool.pages_for(r.total_len) for r in finished)
+        print(f"prefix sharing: {s['prefix_hit_tokens']} prefill tokens "
+              f"skipped ({ps.prefix_hit_rate * 100:.0f}% of looked-up "
+              f"tokens), {s['cow_forks']} COW forks, "
+              f"{naive - pool.pages_allocated_total} of {naive} pages saved "
+              f"({pool.pages_allocated_total} actually allocated)")
     if cost is not None and s["sim_latency_ns"]:
         print(f"simulated decode cost ({args.cost_model} model): "
               f"{s['sim_latency_ns']/1e3:.1f} us, "

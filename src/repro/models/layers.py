@@ -180,6 +180,7 @@ def attention_apply(
     pos: Optional[jax.Array] = None,
     page_table: Optional[jax.Array] = None,
     span_len: Optional[jax.Array] = None,
+    write_start: Optional[jax.Array] = None,
     kv_input: Optional[jax.Array] = None,
     bidir: bool = False,
     backend: str = "einsum",
@@ -198,6 +199,10 @@ def attention_apply(
     carry spans shorter than S (the mixed decode + prefill-chunk batch);
     positions at or beyond ``span_len[b]`` write to the sink page instead of
     the sequence's tables.  None means every row's span is the full S.
+    ``write_start``: (B,) copy-on-write fork point per row of the paged
+    path — global positions below it sit in refcount-shared prefix pages
+    and their writes are redirected to the sink (shared history is
+    immutable; reads still gather through the page table).
     Returns (out, updated_cache).
     """
     B, S, d = x.shape
@@ -248,7 +253,7 @@ def attention_apply(
     if cache is not None and "k_pages" in cache:
         out, new_cache = _paged_attend(
             q, k, v, cache, page_table, q_pos, cfg, window, dtype,
-            span_len=span_len)
+            span_len=span_len, write_start=write_start)
     elif cache is not None:
         # write the S new k/v rows at pos..pos+S-1 into the ring cache,
         # attend each query over the cache under its own causal horizon
@@ -307,27 +312,36 @@ def paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int, dtype) -> d
 
 
 def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
-                  window, dtype, span_len=None):
+                  window, dtype, span_len=None, write_start=None):
     """Write S new k/v rows through the page table, attend over the gathered
     pages.
 
     q: (B,S,H,hd); k/v: (B,S,KV,hd); cache pages: (P, page, KV, hd);
     page_table: (B, MP) physical page ids; q_pos: (B,S) global positions;
-    span_len: optional (B,) valid-token count per row (None = full S).
+    span_len: optional (B,) valid-token count per row (None = full S);
+    write_start: optional (B,) per-row COW fork point — writes at global
+    positions below it are redirected to the sink.
     Logical page ``g // page`` of global position ``g`` maps to physical page
     ``page_table[b, g // page]``.  Unallocated table entries point at the
     reserved sink page 0; they are never attended because the causal mask
     only admits keys at positions <= q_pos.  Positions past a row's span are
     padding — their writes are redirected to the sink page so they can never
-    land in another logical position's live page.
+    land in another logical position's live page.  Positions below a row's
+    ``write_start`` sit in prefix pages shared (refcounted) with other
+    sequences — equally redirected, so span writes are provably confined to
+    exclusively-owned pages no matter what spans the host schedules.
     """
     kp, vp = cache["k_pages"], cache["v_pages"]
     pg = kp.shape[1]
     B, S = q_pos.shape
     phys = jnp.take_along_axis(page_table, q_pos // pg, axis=1)  # (B,S)
     off = q_pos % pg
-    if span_len is not None:
-        valid = jnp.arange(S)[None, :] < span_len[:, None]       # (B,S)
+    if span_len is not None or write_start is not None:
+        valid = jnp.ones((B, S), bool)
+        if span_len is not None:
+            valid &= jnp.arange(S)[None, :] < span_len[:, None]  # (B,S)
+        if write_start is not None:
+            valid &= q_pos >= write_start[:, None]
         phys = jnp.where(valid, phys, 0)  # page 0 is the reserved sink
     kp = kp.at[phys, off].set(k)
     vp = vp.at[phys, off].set(v)

@@ -73,6 +73,7 @@ def attn_block_apply(
     pos=None,
     page_table=None,
     span_len=None,
+    write_start=None,
     enc_out=None,
     bidir: bool = False,
 ) -> tuple[jax.Array, Optional[dict], jax.Array]:
@@ -80,7 +81,8 @@ def attn_block_apply(
     h = L.norm_apply(p["ln1"], x, cfg.norm_type)
     a, new_attn_cache = L.attention_apply(
         p["attn"], h, cfg, window=window, cache=cache["attn"] if cache else None,
-        pos=pos, page_table=page_table, span_len=span_len, bidir=bidir,
+        pos=pos, page_table=page_table, span_len=span_len,
+        write_start=write_start, bidir=bidir,
         backend=cfg.monarch.backend,
     )
     if cfg.sandwich_norm:
@@ -175,6 +177,7 @@ def decoder_stack_apply(
     pos=None,
     page_table=None,
     span_len=None,
+    write_start=None,
     enc_out=None,
     bidir: bool = False,
     train: bool = True,
@@ -198,7 +201,8 @@ def decoder_stack_apply(
             p, win, c = pl
             h, nc, lb = attn_block_apply(
                 p, h, cfg, window=win, cache=c, pos=pos,
-                page_table=page_table, span_len=span_len, enc_out=enc_out)
+                page_table=page_table, span_len=span_len,
+                write_start=write_start, enc_out=enc_out)
             return h, (nc, lb)
         x, (new_caches, lbs) = jax.lax.scan(
             body, x, (params["layers"], windows, cache["layers"]))
@@ -414,9 +418,24 @@ def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
     return {"layers": _bcast(one, (cfg.n_layers,))}
 
 
+def cow_copy_pages(pool: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """Device half of a copy-on-write fork: copy whole pages ``src[i]`` ->
+    ``dst[i]`` in every layer's k/v page arrays ((L, P, page, KV, hd) —
+    the page axis is axis 1).
+
+    Whole-page copies are sufficient even when only the first ``n`` rows of
+    the source are logically shared: rows past the fork point are the source
+    sequence's own continuation, which the forking sequence's causal mask
+    hides until its span writes (positions >= the fork point, enforced by
+    ``write_start``) overwrite them.  Entries may repeat the sink page as
+    padding (sink copied onto itself is a no-op by value)."""
+    return jax.tree_util.tree_map(
+        lambda a: a.at[:, dst].set(a[:, src]), pool)
+
+
 def paged_mixed_step(params, tokens: jax.Array, start: jax.Array,
                      span_len: jax.Array, page_table: jax.Array, pool: dict,
-                     cfg: ModelConfig):
+                     cfg: ModelConfig, write_start: jax.Array = None):
     """ONE unified engine iteration: every row of the slot batch contributes
     a variable-length token span — a prefill chunk, the tail of a chunked
     prompt, or a single decode token.
@@ -426,10 +445,15 @@ def paged_mixed_step(params, tokens: jax.Array, start: jax.Array,
     Real positions write k/v through ``page_table`` into the shared pool;
     padding positions are redirected to the sink page (they can never touch
     a live page — with incremental allocation the table may not even cover
-    them).  Attention is causal within the span and over all previously
-    written positions.  A span of 0 makes the row fully inert (pool
-    untouched, logits garbage — the engine only samples rows whose span
-    reaches the end of their known tokens).
+    them).  ``write_start`` (B,), when given, is each row's copy-on-write
+    fork point: positions below it live in refcount-shared prefix pages and
+    are additionally redirected to the sink — span writes are provably
+    confined to pages the row exclusively owns, whatever the host hands in.
+    (Reads are unaffected: attention gathers shared pages through the page
+    table like any other.)  Attention is causal within the span and over
+    all previously written positions.  A span of 0 makes the row fully
+    inert (pool untouched, logits garbage — the engine only samples rows
+    whose span reaches the end of their known tokens).
 
     Returns (logits at each row's last real span position, updated pool).
     Replaces the separate ``paged_prefill`` / ``paged_decode_step`` pair:
@@ -440,7 +464,8 @@ def paged_mixed_step(params, tokens: jax.Array, start: jax.Array,
     x = L.embed(params["embedding"], tokens, cfg, dtype)
     x, new_pool, _ = decoder_stack_apply(
         params["decoder"], x, cfg, cache=pool, pos=start,
-        page_table=page_table, span_len=span_len, train=False)
+        page_table=page_table, span_len=span_len, write_start=write_start,
+        train=False)
     x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
     idx = (jnp.maximum(span_len, 1) - 1)[:, None, None]
     xl = jnp.take_along_axis(x, idx, axis=1)  # (B,1,d): last real position
@@ -451,7 +476,7 @@ def paged_mixed_step(params, tokens: jax.Array, start: jax.Array,
 __all__ = [
     "init_params", "forward", "loss_fn",
     "init_decode_cache", "decode_step", "prefill", "prefill_with_cache",
-    "init_paged_pool", "paged_mixed_step",
+    "init_paged_pool", "paged_mixed_step", "cow_copy_pages",
     "decoder_stack_init", "decoder_stack_apply",
     "attn_block_init", "attn_block_apply",
 ]

@@ -1,5 +1,6 @@
 """Serving runtime: unified chunked-prefill + decode iterations over a
-paged KV cache, with CIM-cost-aware scheduling and preemption.
+refcounted, prefix-sharing paged KV cache, with CIM-cost-aware scheduling,
+copy-on-write page forks and preemption.
 
 Every engine iteration is ONE mixed forward: each admitted sequence
 contributes a variable-length token span — a prefill chunk, the tail of a
@@ -14,35 +15,71 @@ conservative prompt + max_new reservation).  The chunk that reaches the end
 of the known tokens samples the next token on device, and the request
 decodes one token per step from then on.
 
-Preemption contract: when the pool runs dry mid-flight (a mandatory decode
-cannot get its next page, or nothing at all can make progress), the
-lowest-priority — most recently admitted — sequence is evicted back to
-WAITING: its pages are freed, its cursor resets to 0, but its emitted
-tokens and per-request PRNG stream (``resume_key``) are kept.  On
-re-admission (FIFO, from the queue front) the engine recomputes KV over
-``prompt + emitted`` and sampling continues exactly where it left off —
-greedy output is token-identical to an uninterrupted run.
+Ownership contract (refcounts / prefix trie / copy-on-write):  on a CIM
+system the whole model is resident, so KV capacity — not weights — is the
+scarce on-chip resource, and recomputing shared prompt prefixes burns
+exactly the FLOPs block-diagonal sparsity eliminated.  The pool therefore
+shares pages across sequences:
+
+  * WHO MAY WRITE A PAGE: only the single sequence holding it with
+    refcount 1, and only at positions at or beyond its committed rows.
+    Shared pages are immutable history.  This is enforced twice — host-side
+    by ``PagedKVPool.assert_writable`` on every scheduled span, device-side
+    by a write-mask derived from the fork point (``write_start`` in
+    ``paged_mixed_step``) that redirects any write below it to the sink
+    page.
+  * WHEN FORKS HAPPEN: admission matches the request's known tokens
+    against the trie.  Full-page hits are refcount bumps (zero new pages,
+    zero prefill tokens).  The match is capped one token short of the
+    prompt (the sampler needs fresh logits), so a fully-cached prompt — or
+    a hit ending inside a partially-committed page — triggers a
+    copy-on-write fork: one private page is drawn, the shared page is
+    copied on device (``models.transformer.cow_copy_pages``, dispatched
+    before the fork's first forward), and the cursor starts at the matched
+    length.  Decode writes then land only in the private fork/tail pages.
+  * PREEMPTION OF SHARED PAGES: evicting a victim releases its refcounts;
+    pages other sequences (or the trie) still hold survive, so a victim
+    yields only its exclusive pages (``release_yield`` for one victim; the
+    scheduler's preemption loop additionally credits pages shared only
+    among the victims chosen so far, exactly once).  On
+    re-admission the victim RE-MATCHES ``prompt + emitted`` against the
+    trie — typically hitting the very pages it committed before eviction —
+    and recomputes only the unmatched tail.  Greedy output is
+    token-identical through preemption, sharing on or off.
+  * LIFETIME: committed pages outlive their sequence; ``free`` decrements
+    and a page is only returned to the free list when neither a sequence
+    nor the trie holds it.  Cached-only pages are reclaimed LRU (leaves
+    first) when allocation needs them.
 
 Module map:
   request.py   — ``Request``/``Sequence`` lifecycle, the
-                 ``num_computed_tokens`` cursor, per-request
+                 ``num_computed_tokens`` cursor (starts at the matched
+                 prefix length), ``num_cached_tokens``, per-request
                  ``SamplingParams``, streaming ``on_token`` callbacks.
-  kv_pool.py   — ``PagedKVPool``: fixed-size pages, free-list allocation,
-                 per-sequence page tables, fragmentation stats.  Host-side
-                 twin of the device pool in
+  kv_pool.py   — ``PagedKVPool``: refcounted pages, per-sequence page
+                 tables, the radix/prefix trie over token IDs
+                 (``match_prefix`` / ``acquire_prefix`` /
+                 ``commit_prefix``), COW forks, LRU reclaim, write
+                 confinement, and sharing-aware ``PoolStats``
+                 (shared/unique/cached pages, prefix hit tokens + rate).
+                 Host-side twin of the device pool in
                  ``models.transformer.init_paged_pool``.
   scheduler.py — ``IterationScheduler.plan_step``: packs prefill chunks
                  around the in-flight decodes each step under
-                 slot/page/token/latency budgets and decides preemptions;
-                 pluggable ``CostModel`` with ``HBMCostModel``
-                 (weight-streaming roofline, token-scaled prefill) and
-                 ``CIMCostModel`` (priced by the paper's CIM simulator —
-                 per-token latency/energy from ``cim.simulator.simulate``).
+                 slot/page/token/latency budgets; admission budgets count
+                 only UNIQUE new pages (trie hits are free) and the
+                 pluggable ``CostModel`` prices cached tokens at ~zero
+                 (``prefill_ns(n, cached_tokens=...)``) — ``HBMCostModel``
+                 (weight-streaming roofline) and ``CIMCostModel`` (priced
+                 by the paper's CIM simulator).
   engine.py    — ``ContinuousBatchingEngine``: ONE jitted mixed step over
-                 (slot, span) with on-device sampling only for spans that
-                 reach their prompt end, lagged token harvest, incremental
-                 page allocation and the preemption/resume machinery; plus
-                 the legacy ``ServeEngine`` compat shim.
+                 (slot, span) with on-device sampling, lagged token
+                 harvest, trie lookup at ``add_request``, prefix acquire +
+                 COW dispatch at admission, incremental page allocation,
+                 page commits as the cursor crosses boundaries, and the
+                 preemption/resume machinery; ``prefix_sharing=False``
+                 restores exclusive ownership.  Plus the legacy
+                 ``ServeEngine`` compat shim.
 
 The span-aware Pallas paged-gather attention kernel lives in
 ``kernels/paged.py`` (oracles: ``kernels/ref.py::paged_attention_span_ref``
@@ -52,7 +89,8 @@ The span-aware Pallas paged-gather attention kernel lives in
 
 from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
                                   GenerationConfig, ServeEngine)
-from repro.serving.kv_pool import PagedKVPool, PoolOOM, PoolStats  # noqa: F401
+from repro.serving.kv_pool import (PagedKVPool, PoolOOM,  # noqa: F401
+                                   PoolStats, PrefixMatch)
 from repro.serving.request import (FinishReason, Request,  # noqa: F401
                                    RequestState, SamplingParams, Sequence)
 from repro.serving.scheduler import (CIMCostModel, CostModel,  # noqa: F401

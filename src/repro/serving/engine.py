@@ -15,10 +15,20 @@ under token/page/latency budgets priced by the cost model.
   * KV pages are allocated incrementally as each sequence's
     ``num_computed_tokens`` cursor advances — no conservative
     prompt + max_new reservation.  When the pool runs dry mid-flight the
-    lowest-priority sequence is *preempted* back to WAITING (pages freed,
-    emitted tokens kept, KV recomputed on resume — greedy output is
-    token-identical, and ``resume_key`` keeps sampled runs on their
-    original PRNG stream);
+    lowest-priority sequence is *preempted* back to WAITING (page refcounts
+    released, emitted tokens kept, prefix re-matched on resume — greedy
+    output is token-identical, and ``resume_key`` keeps sampled runs on
+    their original PRNG stream);
+  * prompt prefixes are shared through the pool's refcounted prefix trie
+    (``prefix_sharing=True``): admission starts the cursor at the matched
+    length (shared full pages = refcount bumps, zero prefill tokens), a
+    partially-cached or about-to-be-written shared page is forked
+    copy-on-write (one private page + an on-device page copy, dispatched
+    before the fork's first forward), and full pages are committed back to
+    the trie as the prefill cursor crosses their boundary.  Span writes are
+    provably confined to exclusively-owned pages: host-side by
+    ``pool.assert_writable`` on every span, device-side by a write-mask
+    derived from the fork point (``write_start``);
   * sampling, token feedback and the page-table gather happen on device;
     only rows whose span reaches the end of their known tokens sample.
     Sampled tokens are harvested with a one-step lag: step N+1 is
@@ -89,7 +99,7 @@ def _bucket(n: int, lo: int = 1) -> int:
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def _mixed_step_jit(params, pool, chunk_tok, tok_dev, use_dev, start, span,
-                    pt, sample_mask, temp, keys, *, cfg):
+                    pt, wstart, sample_mask, temp, keys, *, cfg):
     """ONE unified engine iteration over the slot batch.
 
     ``chunk_tok`` (B, S) carries host-known span tokens (prefill chunks);
@@ -98,16 +108,25 @@ def _mixed_step_jit(params, pool, chunk_tok, tok_dev, use_dev, start, span,
     never waits on a host readback.  Rows whose span reaches the end of
     their known tokens (``sample_mask``) draw a token; everyone else keeps
     their device token and PRNG stream untouched — per-request streams
-    advance only on draws, so chunking never perturbs sampling."""
+    advance only on draws, so chunking never perturbs sampling.
+    ``wstart`` (B,) is each row's copy-on-write fork point: positions below
+    it live in shared prefix pages and are never written (mask-enforced in
+    the kernel-side page write, independent of host bookkeeping)."""
     col0 = jnp.where(use_dev, tok_dev, chunk_tok[:, 0])
     tokens = chunk_tok.at[:, 0].set(col0)
     logits, pool = T.paged_mixed_step(params, tokens, start, span, pt, pool,
-                                      cfg)
+                                      cfg, write_start=wstart)
     draw, carry = _split_rows(keys)
     sampled = _sample_rows(logits, temp, draw)
     tok_new = jnp.where(sample_mask, sampled, tok_dev)
     keys_new = jnp.where(sample_mask[:, None], carry, keys)
     return pool, sampled, tok_new, keys_new
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _cow_copy_jit(pool, src, dst):
+    """Device half of COW forks: copy pages ``src`` -> ``dst`` everywhere."""
+    return T.cow_copy_pages(pool, src, dst)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
@@ -131,7 +150,8 @@ class ContinuousBatchingEngine:
                  cost_model: Optional[CostModel] = None,
                  use_paged_kernel: bool = False,
                  quantize: Optional[str] = None,
-                 fuse_projections: bool = False):
+                 fuse_projections: bool = False,
+                 prefix_sharing: bool = True):
         if cfg.layer_kind != "attn":
             raise ValueError(
                 "continuous batching needs an attn stack; SSM/hybrid models "
@@ -170,8 +190,10 @@ class ContinuousBatchingEngine:
         self.pool_host = PagedKVPool(n_pages, page_size,
                                      self.max_pages_per_seq)
         self.pool = T.init_paged_pool(cfg, n_pages, page_size)
+        self.prefix_sharing = prefix_sharing
         sc = scheduler_cfg or SchedulerConfig()
-        sc = dataclasses.replace(sc, max_slots=max_slots)
+        sc = dataclasses.replace(sc, max_slots=max_slots,
+                                 prefix_sharing=prefix_sharing)
         if chunk_size is not None:
             sc = dataclasses.replace(sc, chunk_size=chunk_size)
         self.scheduler = IterationScheduler(sc, cost_model)
@@ -181,6 +203,7 @@ class ContinuousBatchingEngine:
         self._tok = jnp.zeros((S,), jnp.int32)
         self._temp = jnp.zeros((S,), jnp.float32)
         self._pt = jnp.full((S, MP), SINK_PAGE, jnp.int32)
+        self._wstart = jnp.zeros((S,), jnp.int32)   # per-slot COW fork point
         self._keys = jnp.zeros((S, 2), jnp.uint32)  # per-request PRNG streams
 
         self.waiting: collections.deque[Request] = collections.deque()
@@ -192,6 +215,7 @@ class ContinuousBatchingEngine:
         self.step_idx = 0
         self.stats = {"mixed_steps": 0, "decode_tokens": 0,
                       "prefill_tokens": 0, "tokens_out": 0, "preemptions": 0,
+                      "prefix_hit_tokens": 0, "cow_forks": 0,
                       "sim_latency_ns": 0.0, "sim_energy_nj": 0.0}
         self._mixed = functools.partial(_mixed_step_jit, cfg=self.cfg)
 
@@ -215,6 +239,12 @@ class ContinuousBatchingEngine:
             raise PoolOOM(
                 f"request needs {need} pages; pool has "
                 f"{self.pool_host.n_pages - 1} total")
+        if self.prefix_sharing:
+            # trie lookup at intake: an early hint for callers/logging (the
+            # authoritative match re-runs at admission — the trie may gain
+            # or lose entries while the request waits in the queue)
+            req.num_cached_tokens = self.pool_host.match_prefix(
+                req.known_tokens).n_tokens
         req.arrived_step = self.step_idx
         self.waiting.append(req)
         return req
@@ -252,6 +282,17 @@ class ContinuousBatchingEngine:
                 assert not plan.preemptions, "preemption did not converge"
 
         spans = list(plan.spans)
+        # reserve the mandatory decodes' pages BEFORE admissions touch the
+        # pool: an admission's COW fork (or a trie-drift re-match) may draw
+        # pages the plan did not charge it for, and the shrink logic in
+        # _dispatch can only soften prefill spans — a decode must never
+        # find its page gone
+        for seq, n in spans:
+            if seq.request.state is RequestState.RUNNING:
+                new = self.pool_host.extend(seq.req_id, seq.num_computed + n)
+                if new:
+                    seq.page_ids.extend(new)
+                    self._pt_dirty.add(seq.slot)
         spans.extend(self._admit(plan.admissions))
         if spans:
             self._dispatch(spans)
@@ -298,13 +339,19 @@ class ContinuousBatchingEngine:
     def _admit(self, admissions: list[tuple[Request, int]]
                ) -> list[tuple[Sequence, int]]:
         """Move a FIFO prefix of the waiting queue into slots; their first
-        chunks join this step's spans.  A resumed (preempted) request
-        re-enters here with its emitted tokens folded into the prefill
-        target (recompute-on-resume) and its saved PRNG stream."""
+        chunks join this step's spans.  With prefix sharing the page table
+        starts from the trie match — shared full pages by refcount, a
+        partial/about-to-be-written page by COW fork (device page copies
+        dispatched here, before the step that writes into the fork) — and
+        the cursor starts at the matched length.  A resumed (preempted)
+        request re-enters with its emitted tokens folded into the prefill
+        target (re-matched against the trie, typically a cache hit on the
+        pages it committed before eviction) and its saved PRNG stream."""
         spans: list[tuple[Sequence, int]] = []
         if not admissions:
             return spans
-        rows, temps, keys = [], [], []
+        rows, temps, keys, wstarts = [], [], [], []
+        cow_ops: list[tuple[int, int]] = []
         for req, chunk in admissions:
             assert self.waiting[0] is req, "admissions must be a FIFO prefix"
             self.waiting.popleft()
@@ -312,7 +359,26 @@ class ContinuousBatchingEngine:
             if req.admitted_step < 0:
                 req.admitted_step = self.step_idx
             target = len(req.known_tokens)
-            pages = self.pool_host.allocate(req.req_id, chunk)
+            # the chunk's own pages are drawn in _dispatch, in scheduler
+            # priority order (decodes -> residents -> admissions), so a
+            # mid-step drift in what the trie still holds can only shrink
+            # the lowest-priority spans, never starve a mandatory decode
+            if self.prefix_sharing:
+                pages, matched, cow = self.pool_host.acquire_prefix(
+                    req.req_id, req.known_tokens)
+                chunk = min(chunk, target - matched)
+                cow_ops.extend(cow)
+                # read through the pool's counters — the pool also counts
+                # adopt-in-place forks, which return no cow op
+                self.stats["prefix_hit_tokens"] = \
+                    self.pool_host.prefix_hit_tokens
+                self.stats["cow_forks"] = self.pool_host.cow_forks
+            else:
+                # no trie, no drift: the exclusive path draws at admit
+                pages, matched = self.pool_host.allocate(req.req_id,
+                                                         chunk), 0
+            req.num_computed_tokens = matched
+            req.num_cached_tokens = matched
             slot = self._free_slots.pop()
             seq = Sequence(request=req, slot=slot, page_ids=pages,
                            prefill_target=target,
@@ -322,6 +388,7 @@ class ContinuousBatchingEngine:
             spans.append((seq, chunk))
             rows.append(slot)
             temps.append(req.sampling.temperature)
+            wstarts.append(matched)
             if req.resume_key is not None:
                 keys.append(np.asarray(req.resume_key, np.uint32))
             else:
@@ -329,7 +396,20 @@ class ContinuousBatchingEngine:
                     jax.random.PRNGKey(req.sampling.seed), np.uint32))
         idx = np.asarray(rows)
         self._temp = self._temp.at[idx].set(np.asarray(temps, np.float32))
+        self._wstart = self._wstart.at[idx].set(
+            np.asarray(wstarts, np.int32))
         self._keys = self._keys.at[idx].set(np.stack(keys))
+        if cow_ops:
+            # whole-page device copies; rows past the fork point are stale
+            # source data, masked by causality until the forking sequence
+            # overwrites them with its own span writes
+            n = _bucket(len(cow_ops))
+            src = np.full((n,), SINK_PAGE, np.int32)  # pad: sink onto itself
+            dst = np.full((n,), SINK_PAGE, np.int32)
+            for i, (s, d) in enumerate(cow_ops):
+                src[i], dst[i] = s, d
+            self.pool = _cow_copy_jit(self.pool, jnp.asarray(src),
+                                      jnp.asarray(dst))
         return spans
 
     def _dispatch(self, spans: list[tuple[Sequence, int]]) -> None:
@@ -349,10 +429,23 @@ class ContinuousBatchingEngine:
         for seq, n in spans:
             req = seq.request
             nc = seq.num_computed
+            if req.state is not RequestState.RUNNING:
+                # prefill chunk: absorb planning drift (a trie eviction
+                # between plan and execution can shift a fresh admission's
+                # match by a fraction of a page) by shrinking the span to
+                # the pages actually on hand; 0 stalls the row this step
+                cover = (len(seq.page_ids) * self.page_size - nc
+                         + self.pool_host.free_pages * self.page_size)
+                n = min(n, max(cover, 0))
+                if n <= 0:
+                    continue
             new = self.pool_host.extend(req.req_id, nc + n)
             if new:
                 seq.page_ids.extend(new)
                 self._pt_dirty.add(seq.slot)
+            # write confinement: the span [nc, nc+n) must land only in pages
+            # this sequence exclusively owns (refcount 1, uncommitted rows)
+            self.pool_host.assert_writable(req.req_id, nc, nc + n)
             s = seq.slot
             start[s] = nc
             span[s] = n
@@ -371,6 +464,13 @@ class ContinuousBatchingEngine:
                 self.stats["prefill_tokens"] += n
                 if reaches_end:
                     req.state = RequestState.RUNNING
+                if self.prefix_sharing:
+                    # every full page the cursor just crossed (and, at the
+                    # end of prefill, the partial tail) becomes shareable —
+                    # the device write for these rows is already enqueued
+                    # ahead of any future forward that could read them
+                    self.pool_host.commit_prefix(req.req_id,
+                                                 req.known_tokens, nc + n)
             req.num_computed_tokens = nc + n
             self.pool_host.advance(req.req_id, n)
             if sample[s]:
@@ -395,7 +495,8 @@ class ContinuousBatchingEngine:
         (self.pool, sampled, self._tok, self._keys) = self._mixed(
             self.params, self.pool, jnp.asarray(chunk_tok), self._tok,
             jnp.asarray(use_dev), jnp.asarray(start), jnp.asarray(span),
-            self._pt, jnp.asarray(sample), self._temp, self._keys)
+            self._pt, self._wstart, jnp.asarray(sample), self._temp,
+            self._keys)
         self._pending.append({"sampled": sampled, "slots": harvest})
 
     def _harvest(self, entry: dict) -> list[Request]:

@@ -15,11 +15,14 @@ when the cursor reaches the end — the chunk that gets there also samples
 the next token, after which the request contributes one decode token per
 step.
 
-Preemption sends a PREFILLING/RUNNING request back to WAITING: its pages
-are freed and the cursor resets to 0, but the tokens it already emitted are
-kept — on re-admission the engine recomputes KV over ``prompt + emitted``
-(recompute-on-resume) and sampling continues exactly where it left off
-(``resume_key`` carries the per-request PRNG stream across the eviction).
+Preemption sends a PREFILLING/RUNNING request back to WAITING: its page
+refcounts are released and the cursor resets to 0, but the tokens it
+already emitted are kept — on re-admission the engine *re-matches* the
+prefix trie over ``prompt + emitted`` (pages this request committed before
+eviction are usually still cached, so resume is a cache hit, not a
+recompute), computes KV only for the unmatched tail, and sampling continues
+exactly where it left off (``resume_key`` carries the per-request PRNG
+stream across the eviction).
 
 ``Sequence`` is the scheduled unit: the slot index in the batch, the
 sequence's page allocation, and its prefill target.  One request owns
@@ -70,9 +73,13 @@ class Request:
     output_tokens: list[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[FinishReason] = None
     # prefill cursor: tokens of ``known_tokens`` whose KV is in the pool.
-    # Advances chunk by chunk while PREFILLING; resets to 0 on preemption
-    # (pages freed -> recompute on resume).
+    # Starts at the matched-prefix length when prefix sharing finds cached
+    # pages at admission; advances chunk by chunk while PREFILLING; resets
+    # to 0 on preemption (re-matched, not recomputed, on resume).
     num_computed_tokens: int = 0
+    # tokens served from shared prefix pages at the LAST admission (stats;
+    # also the device write-mask fork point while this admission lives)
+    num_cached_tokens: int = 0
     num_preemptions: int = 0
     # per-request PRNG stream captured at preemption ((2,) uint32), so a
     # resumed sampled request draws the same continuation it would have

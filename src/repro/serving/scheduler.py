@@ -14,14 +14,29 @@ the scheduler decides the token span each sequence contributes to it.
   * an optional step-latency budget priced by the cost model bounds how
     much prefill work rides along with the decode batch.
 
+Admission is *prefix-cache aware* (``SchedulerConfig.prefix_sharing``): a
+WAITING request's known tokens are matched against the pool's prefix trie,
+and only the unmatched tail needs a chunk.  Budgets count only the UNIQUE
+new pages an admission consumes — shared full pages are refcount bumps
+(zero pages, zero tokens) and a copy-on-write fork is exactly one page —
+so at equal prompt length a cache-hit request admits earlier and packs
+denser than a miss: its chunk is smaller, its page draw near zero, and the
+cost model prices its cached tokens at ~zero weight-read / CIM-cycle
+latency (``prefill_ns(n, cached_tokens=...)``).
+
 Because pages are allocated as each cursor advances (no conservative
 prompt + max_new reservation), the pool can run dry mid-flight.  The plan
 then *preempts*: the lowest-priority (most recently admitted)
-PREFILLING/RUNNING sequence is evicted back to WAITING — pages freed,
-emitted tokens kept, KV recomputed on resume — and planning retries with
-the reclaimed pages.  Preemption also fires when nothing at all could be
-scheduled (liveness): the victim's pages let the highest-priority stalled
-sequence make progress.
+PREFILLING/RUNNING sequence is evicted back to WAITING — page refcounts
+released, emitted tokens kept, prefix re-matched on resume — and planning
+retries with the reclaimed pages.  With sharing, evicting a victim yields
+only the pages no SURVIVING sequence still holds: pages shared with
+residents stay resident, while a page held only by the victims chosen so
+far is credited exactly once (incremental pending-release accounting — a
+per-victim ``release_yield`` would credit a page two victims share to
+neither).  Preemption also
+fires when nothing at all could be scheduled (liveness): the victim's
+pages let the highest-priority stalled sequence make progress.
 
 Two cost models ship:
 
@@ -46,9 +61,10 @@ the knob the paper's framework exposes.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Protocol, Sequence as Seq
 
-from repro.serving.kv_pool import PagedKVPool
+from repro.serving.kv_pool import NO_MATCH, PagedKVPool
 from repro.serving.request import Request, RequestState, Sequence
 
 
@@ -57,8 +73,10 @@ class CostModel(Protocol):
         """Predicted latency of one decode step over ``n_seqs`` sequences."""
         ...
 
-    def prefill_ns(self, n_tokens: int) -> float:
-        """Predicted latency of prefilling ``n_tokens`` prompt tokens."""
+    def prefill_ns(self, n_tokens: int, cached_tokens: int = 0) -> float:
+        """Predicted latency of prefilling ``n_tokens`` prompt tokens, of
+        which ``cached_tokens`` are served from shared prefix pages (page
+        table pointer updates: no weight read, no CIM cycles — near-zero)."""
         ...
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
@@ -85,18 +103,24 @@ class HBMCostModel:
         kv_bytes = n_seqs * avg_ctx * self.kv_bytes_per_token
         return (weight_bytes + kv_bytes) / self.bandwidth_gbps
 
-    def prefill_ns(self, n_tokens: int) -> float:
+    def prefill_ns(self, n_tokens: int, cached_tokens: int = 0) -> float:
         # one weight pass (amortized over the chunk) + per-token compute:
         # the cost must grow with the token count or a chunk-size budget
-        # never binds (2 flops per param per token, GFLOP/s == flops/ns)
+        # never binds (2 flops per param per token, GFLOP/s == flops/ns).
+        # Cached tokens are prefix-trie hits — their KV already sits in the
+        # pool, so they cost neither the weight pass nor any compute: a
+        # fully-cached chunk is priced at zero (page-table pointer updates)
+        computed = max(n_tokens - cached_tokens, 0)
+        if computed == 0:
+            return 0.0
         weight_ns = self.n_params * self.bytes_per_param / self.bandwidth_gbps
-        compute_ns = 2.0 * self.n_params * n_tokens / self.compute_gflops
+        compute_ns = 2.0 * self.n_params * computed / self.compute_gflops
         return weight_ns + compute_ns
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
         return 0.0
 
-    def prefill_nj(self, n_tokens: int) -> float:
+    def prefill_nj(self, n_tokens: int, cached_tokens: int = 0) -> float:
         return 0.0
 
     @classmethod
@@ -156,16 +180,18 @@ class CIMCostModel:
         attn = self.attn_dpu_ns_per_key * avg_ctx
         return n_seqs * (self.per_token_ns + attn)
 
-    def prefill_ns(self, n_tokens: int) -> float:
-        return n_tokens * self.per_token_ns
+    def prefill_ns(self, n_tokens: int, cached_tokens: int = 0) -> float:
+        # cached tokens never stream through the DAC/ADC arrays — a prefix
+        # hit costs zero bit-serial cycles, only page-table pointer updates
+        return max(n_tokens - cached_tokens, 0) * self.per_token_ns
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
         return n_seqs * self.per_token_nj
 
-    def prefill_nj(self, n_tokens: int) -> float:
+    def prefill_nj(self, n_tokens: int, cached_tokens: int = 0) -> float:
         # CIM prices every token streamed through the arrays, prefill or
         # decode alike — chunk composition shows up in energy, not just time
-        return n_tokens * self.per_token_nj
+        return max(n_tokens - cached_tokens, 0) * self.per_token_nj
 
 
 @dataclasses.dataclass
@@ -174,6 +200,9 @@ class SchedulerConfig:
     chunk_size: int = 64          # max prefill tokens one sequence gets/step
     max_step_tokens: int = 2048   # total span tokens per step (decode+chunks)
     step_latency_budget_ns: Optional[float] = None
+    # admissions match the pool's prefix trie: cached tokens are skipped and
+    # budgets count only the unique new pages a request actually consumes
+    prefix_sharing: bool = True
 
 
 @dataclasses.dataclass
@@ -233,9 +262,11 @@ class IterationScheduler:
         order = sorted(running, key=lambda s: s.admit_order)
         preempted: list[Sequence] = []
         extra_pages = 0
+        pending: dict[int, int] = {}   # page -> releases from chosen victims
+        match_memo: dict[int, object] = {}   # req_id -> PrefixMatch (per plan)
         while True:
             cand = order[:len(order) - len(preempted)]
-            plan = self._pack(waiting, cand, pool, extra_pages)
+            plan = self._pack(waiting, cand, pool, extra_pages, match_memo)
             if plan is not None:
                 # already lowest-priority-first (victims were taken from the
                 # back): the engine appendlefts in this order, so an OLDER
@@ -248,10 +279,19 @@ class IterationScheduler:
                     "cannot host a single chunk (pool too small)")
             victim = cand[-1]
             preempted.append(victim)
-            extra_pages += len(victim.page_ids)
+            # with prefix sharing only EXCLUSIVE pages come back — but
+            # "exclusive" must be judged against the releases of the
+            # victims already chosen this plan: a page held only by two
+            # victims frees up once BOTH go, and crediting it to neither
+            # would walk the eviction pointlessly far up the priority list
+            for p in victim.page_ids:
+                if pool.refcount(p) - pending.get(p, 0) == 1:
+                    extra_pages += 1
+                pending[p] = pending.get(p, 0) + 1
 
     def _pack(self, waiting: Seq[Request], cand: list[Sequence],
-              pool: PagedKVPool, extra_pages: int) -> Optional[StepPlan]:
+              pool: PagedKVPool, extra_pages: int,
+              match_memo: Optional[dict] = None) -> Optional[StepPlan]:
         """One packing attempt over ``cand`` (priority order).  Returns None
         when packing needs a preemption: a decode span is page-starved, or
         zero tokens were scheduled while residents exist."""
@@ -289,17 +329,45 @@ class IterationScheduler:
             budget -= chunk
             plan.spans.append((seq, chunk))
 
-        # 3. FIFO admissions into free slots, first chunk rides this step
+        # 3. FIFO admissions into free slots, first chunk rides this step.
+        # A prefix-trie hit shrinks the admission to its unmatched tail:
+        # shared full pages are refcount bumps (no pages, no tokens), a COW
+        # fork draws exactly one page, and only the remaining tokens need a
+        # chunk — so cache-hit requests admit (and finish prefill) far
+        # earlier than equal-length misses under the same budgets.
         free_slots = cfg.max_slots - len(cand)
+        ps = pool.page_size
+        if match_memo is None:
+            match_memo = {}
         for req in waiting:
             if free_slots <= 0:
                 break
             target = len(req.prompt) + len(req.output_tokens)
-            chunk = self._chunk_for(target, budget, free, 0, pool.page_size,
-                                    plan, n_dec, avg_ctx)
+            if not cfg.prefix_sharing:
+                hit = NO_MATCH
+            elif req.req_id in match_memo:
+                # the trie cannot change while one plan is being packed, and
+                # plan_step re-packs once per preemption victim — walk once
+                hit = match_memo[req.req_id]
+            else:
+                hit = match_memo[req.req_id] = pool.match_prefix(
+                    req.known_tokens)
+            cached = hit.n_tokens
+            n_table = math.ceil(cached / ps)    # match pages, fork included
+            slack = n_table * ps - cached       # room left in the fork page
+            # the fork draws a page, and every matched page no sequence
+            # holds flips from reclaimable (counted in free) to held —
+            # both charge the budget like fresh draws
+            fixed = hit.n_cow_pages + hit.n_reclaimed
+            if fixed > free:
+                break  # the hit itself exceeds the remaining capacity
+            chunk = self._chunk_for(target - cached, budget, free - fixed,
+                                    slack, ps, plan, n_dec, avg_ctx,
+                                    cached=cached)
             if chunk <= 0:
                 break  # strict FIFO: no skip-ahead, no starvation
-            free -= pool.pages_for(chunk)
+            free -= fixed + max(
+                0, math.ceil((cached + chunk) / ps) - n_table)
             budget -= chunk
             free_slots -= 1
             plan.admissions.append((req, chunk))
@@ -310,10 +378,11 @@ class IterationScheduler:
 
     def _chunk_for(self, remaining: int, budget: int, free_pages: int,
                    slack_tokens: int, page_size: int, plan: StepPlan,
-                   n_dec: int, avg_ctx: float) -> int:
+                   n_dec: int, avg_ctx: float, cached: int = 0) -> int:
         """Largest prefill chunk for one sequence under the chunk / step-token
         / page / latency budgets.  ``slack_tokens`` is the headroom already
-        covered by the sequence's allocated pages (0 for a fresh admission)."""
+        covered by the sequence's allocated (or prefix-matched) pages;
+        ``cached`` is the prefix-hit length the cost model prices at ~zero."""
         chunk = min(self.cfg.chunk_size, remaining, max(budget, 0))
         # shrink to the pages actually available
         chunk = min(chunk, slack_tokens + free_pages * page_size)
@@ -327,13 +396,24 @@ class IterationScheduler:
             # else skips the check — minimum progress beats the SLO)
             base = plan.prefill_tokens
             while chunk > 0:
-                projected = self.cost_model.prefill_ns(base + chunk)
+                projected = self._prefill_ns(base + chunk + cached, cached)
                 if n_dec:
                     projected += self.cost_model.decode_step_ns(n_dec, avg_ctx)
                 if projected <= self.cfg.step_latency_budget_ns:
                     break
                 chunk //= 2
         return chunk
+
+    def _prefill_ns(self, n_tokens: int, cached: int) -> float:
+        """Price a prefill, passing the cached-token discount only to cost
+        models that understand it (third-party models predate the kwarg)."""
+        if cached:
+            try:
+                return self.cost_model.prefill_ns(n_tokens,
+                                                  cached_tokens=cached)
+            except TypeError:
+                pass
+        return self.cost_model.prefill_ns(n_tokens)
 
     # -- accounting -----------------------------------------------------------
 

@@ -1,8 +1,11 @@
-"""Tests for the continuous-batching serving runtime: paged-pool invariants
-(property-tested), the chunk-packing scheduler + preemption planning, the
-span-aware paged attention kernel vs its oracle, and token-identical
-equivalence between the unified mixed-step engine and the single-request
-path — across chunk sizes and through preemption."""
+"""Tests for the continuous-batching serving runtime: refcounted paged-pool
+invariants (property-tested, with prefix match/fork/commit/release
+interleavings), prefix-trie sharing + copy-on-write semantics, write
+confinement (host assert + device write-mask), the chunk-packing scheduler
+with cache-hit-aware admission + preemption planning, the span-aware paged
+attention kernel vs its oracle, and token-identical equivalence between the
+unified mixed-step engine and the single-request path — across chunk sizes,
+with prefix sharing on and off, and through preemption."""
 
 import numpy as np
 import pytest
@@ -83,6 +86,119 @@ def test_pool_free_unknown_seq_is_clean_error():
     pool.check_invariants()
 
 
+def test_prefix_sharing_full_page_hit_is_zero_new_pages():
+    """A second request with an identical committed prompt acquires the same
+    physical pages by refcount — zero pages drawn, zero tokens to compute
+    (bar the final token, which is never matched)."""
+    pool = PagedKVPool(n_pages=17, page_size=4)
+    toks = list(range(12))             # exactly 3 pages
+    pool.allocate(1, 12)
+    pool.commit_prefix(1, toks, 12)
+    free0 = pool.free_pages
+    pages, matched, cow = pool.acquire_prefix(2, toks + [99])
+    assert matched == 12 and not cow
+    assert pages == pool.page_table(1)
+    assert pool.free_pages == free0    # refcount bumps only
+    assert all(pool.refcount(p) == 2 for p in pages)
+    pool.check_invariants()
+
+
+def test_prefix_sharing_cow_forks_fully_cached_prompt():
+    """An identical page-aligned prompt is FULLY cached, but its last token
+    must be recomputed for logits — the last matched page forks COW into a
+    private page instead of being shared."""
+    pool = PagedKVPool(n_pages=17, page_size=4)
+    toks = list(range(8))
+    pool.allocate(1, 8)
+    pool.commit_prefix(1, toks, 8)
+    pages, matched, cow = pool.acquire_prefix(2, toks)
+    assert matched == 7                      # cap: one token recomputed
+    assert len(cow) == 1
+    src, dst = cow[0]
+    assert src == pool.page_table(1)[1]      # forked FROM the shared page
+    assert dst == pages[-1] and dst not in pool.page_table(1)
+    assert pool.refcount(src) == 1 and pool.refcount(dst) == 1
+    assert pool.refcount(pages[0]) == 2      # first page genuinely shared
+    pool.check_invariants()
+
+
+def test_prefix_sharing_partial_page_cow():
+    """A committed prompt tail shorter than one page is matched through a
+    COW fork of the partial page (rows beyond the commit are not matched)."""
+    pool = PagedKVPool(n_pages=17, page_size=4)
+    toks = list(range(10))             # 2 full pages + 2-row partial
+    pool.allocate(1, 10)
+    pool.commit_prefix(1, toks, 10)
+    m = pool.match_prefix(toks + [77, 78])
+    assert m.n_tokens == 10 and m.cow == (pool.page_table(1)[2], 2)
+    pages, matched, cow = pool.acquire_prefix(2, toks + [77, 78])
+    assert matched == 10 and len(cow) == 1
+    assert pool.refcount(pool.page_table(1)[2]) == 1  # partial NOT shared
+    pool.check_invariants()
+    # diverging mid-partial: only the common prefix of the tail matches
+    m2 = pool.match_prefix(toks[:9] + [55, 66])
+    assert m2.n_tokens == 9 and m2.cow[1] == 1
+
+
+def test_prefix_cache_survives_free_and_is_reclaimed_lru():
+    """Committed pages outlive their sequence (free decrements, cached pages
+    stay reclaimable and matchable) and are evicted LRU under pressure."""
+    pool = PagedKVPool(n_pages=9, page_size=4)
+    a, b = list(range(8)), list(range(100, 108))
+    pool.allocate(1, 8)
+    pool.commit_prefix(1, a, 8)
+    pool.allocate(2, 8)
+    pool.commit_prefix(2, b, 8)
+    pool.free(1)
+    pool.free(2)
+    st_ = pool.stats()
+    assert st_.cached_pages == 4 and st_.free_pages == 8
+    assert pool.match_prefix(a + [1]).n_tokens == 8  # hit after free
+    # touch b (LRU refresh), then squeeze: a's pages must be evicted first
+    pool.acquire_prefix(3, b + [9])
+    pool.free(3)
+    pool.allocate(4, 24)               # 6 pages: forces reclaim of a's
+    pool.check_invariants()
+    assert pool.match_prefix(a + [1]).n_tokens == 0
+    assert pool.match_prefix(b + [9]).n_tokens > 0   # recently-used survived
+
+
+def test_release_yield_counts_exclusive_pages_only():
+    pool = PagedKVPool(n_pages=17, page_size=4)
+    toks = list(range(12))
+    pool.allocate(1, 12)
+    pool.commit_prefix(1, toks, 12)
+    pool.acquire_prefix(2, toks + [5])
+    pool.extend(2, 16)                 # one private page on top of 3 shared
+    assert pool.release_yield(2) == 1  # evicting seq 2 reclaims only that
+    assert pool.release_yield(1) == 0  # everything seq 1 holds is shared
+    pool.free(2)
+    assert pool.release_yield(1) == 3
+
+
+def test_assert_writable_blocks_shared_and_committed_pages():
+    pool = PagedKVPool(n_pages=17, page_size=4)
+    toks = list(range(10))
+    pool.allocate(1, 10)
+    pool.commit_prefix(1, toks, 10)    # 2 full nodes + 2-row partial
+    pool.acquire_prefix(2, toks + [7, 8])
+    pool.extend(2, 16)
+    # seq 2 writing into the shared prefix region must be refused
+    with pytest.raises(RuntimeError, match="shared"):
+        pool.assert_writable(2, 0, 4)
+    pool.assert_writable(2, 10, 16)    # its COW fork tail + private page: ok
+    # seq 1 may still append to its own partially-committed tail page...
+    pool.assert_writable(1, 10, 12)
+    # ...but never rewrite the rows it already committed
+    with pytest.raises(RuntimeError, match="committed"):
+        pool.assert_writable(1, 8, 9)
+    # and a full committed page is immutable even once unshared
+    pool.free(2)
+    with pytest.raises(RuntimeError, match="committed"):
+        pool.assert_writable(1, 4, 8)
+    pool.check_invariants()
+
+
 @given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 40)),
                     min_size=1, max_size=60))
 @settings(deadline=None, max_examples=40)
@@ -118,6 +234,69 @@ def test_pool_invariants_random_ops(ops):
         # a freed-then-reused page set still never double-owns
         owned = [p for s in live for p in pool.page_table(s)]
         assert len(owned) == len(set(owned))
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(1, 24),
+                              st.integers(0, 2)),
+                    min_size=1, max_size=60))
+@settings(deadline=None, max_examples=40)
+def test_pool_invariants_random_ops_with_sharing(ops):
+    """allocate/extend/advance/free interleaved with match/acquire (fork),
+    commit and release over a 3-token vocabulary (collisions everywhere, so
+    sharing actually happens): per-page sequence refcounts always equal the
+    number of tables holding the page, trie bookkeeping stays consistent,
+    and no page is ever both free and referenced (or cached)."""
+    pool = PagedKVPool(n_pages=12, page_size=4)
+    vocab = 3
+    live: dict[int, list[int]] = {}    # seq_id -> its token list
+    next_id = 0
+    for kind, n_tokens, tok in ops:
+        toks = [(tok + j) % vocab for j in range(n_tokens)]
+        if kind == 0:      # fresh exclusive allocation
+            try:
+                pool.allocate(next_id, n_tokens)
+                live[next_id] = toks
+                next_id += 1
+            except PoolOOM:
+                pass
+        elif kind == 1 and live:   # extend + append tokens
+            sid = next(iter(live))
+            try:
+                pool.extend(sid, len(live[sid]) + n_tokens)
+                live[sid] += toks
+            except PoolOOM:
+                pass
+        elif kind == 2 and live:   # advance (accounting only)
+            pool.advance(next(iter(live)), 1)
+        elif kind == 3 and live:   # release: refcount decrement
+            sid = next(iter(live))
+            pool.free(sid)
+            del live[sid]
+        elif kind == 4:            # acquire via trie match (maybe COW fork)
+            sid = next_id
+            next_id += 1
+            pages, matched, cow = pool.acquire_prefix(sid, toks)
+            assert matched < len(toks)     # last token never matched
+            assert len(pages) == -(-matched // 4) and len(cow) <= 1
+            try:
+                pool.extend(sid, len(toks))
+                live[sid] = toks
+            except PoolOOM:        # acquired but can't cover: clean release
+                pool.free(sid)
+        elif kind == 5 and live:   # commit the known prefix
+            sid = next(iter(live))
+            pool.commit_prefix(sid, live[sid], min(n_tokens,
+                                                   len(live[sid])))
+        pool.check_invariants()
+        # independent cross-check of the refcount == holders invariant
+        counts: dict[int, int] = {}
+        for s in live:
+            for p in pool.page_table(s):
+                counts[p] = counts.get(p, 0) + 1
+        for p, c in counts.items():
+            assert pool.refcount(p) == c, (p, c)
+        assert all(pool.refcount(p) == counts.get(p, 0)
+                   for s in live for p in pool.page_table(s))
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +444,116 @@ def test_plan_latency_budget_never_blocks_lone_progress():
     assert len(plan.admissions) == 1   # minimum progress beats the SLO
 
 
+def test_cost_models_price_cached_prefill_near_zero():
+    """Satellite: a fully-cached prefill chunk is (near-)zero under both
+    cost models — cached tokens are page-table pointer updates, costing
+    neither a weight read (HBM) nor bit-serial DAC/ADC cycles (CIM)."""
+    from repro.serving import CIMCostModel
+
+    hbm = HBMCostModel.from_model_config(CFG)
+    assert hbm.prefill_ns(128) > 0
+    assert hbm.prefill_ns(128, cached_tokens=128) == 0.0
+    assert hbm.prefill_nj(128, cached_tokens=128) == 0.0
+    # partially cached: only the uncached tail pays compute
+    assert hbm.prefill_ns(128, cached_tokens=64) < hbm.prefill_ns(128)
+    cim = CIMCostModel(CFG, strategy="sparse", seq_len=64)
+    assert cim.prefill_ns(128) > 0
+    assert cim.prefill_ns(128, cached_tokens=128) == 0.0
+    assert cim.prefill_nj(128, cached_tokens=128) == 0.0
+    # CIM is per-token linear: caching 64 of 128 == prefilling 64
+    assert cim.prefill_ns(128, cached_tokens=64) == cim.prefill_ns(64)
+
+
+def test_plan_admits_cached_prefill_ahead_of_uncached():
+    """Satellite: with the prompt's pages cached, plan_step prices the hit
+    request's admission at one token (its whole remaining prefill) and the
+    equal-length uncached request only gets the leftover budget — the
+    cache hit effectively jumps the packing order."""
+    pool = PagedKVPool(n_pages=64, page_size=8)
+    shared = list(range(64))
+    pool.allocate(99, 64)
+    pool.commit_prefix(99, shared, 64)
+    pool.free(99)
+
+    hit = Request(prompt=list(shared),
+                  sampling=SamplingParams(max_new_tokens=4))
+    miss = Request(prompt=list(range(100, 164)),
+                   sampling=SamplingParams(max_new_tokens=4))
+    sched = IterationScheduler(SchedulerConfig(
+        max_slots=4, chunk_size=256, max_step_tokens=16))
+    plan = sched.plan_step([hit, miss], [], pool)
+    chunks = dict((r.req_id, n) for r, n in plan.admissions)
+    # hit: 63 of 64 tokens matched (COW fork recomputes the last) -> its
+    # ENTIRE remaining prefill fits in 1 token; miss gets the other 15
+    assert chunks[hit.req_id] == 1
+    assert chunks[miss.req_id] == 15
+    # sharing disabled: the same 16-token budget is swallowed by the hit
+    # request's uncached prompt and the miss is shut out entirely
+    sched_off = IterationScheduler(SchedulerConfig(
+        max_slots=4, chunk_size=256, max_step_tokens=16,
+        prefix_sharing=False))
+    plan_off = sched_off.plan_step([hit, miss], [], pool)
+    assert [(r.req_id, n) for r, n in plan_off.admissions] == \
+        [(hit.req_id, 16)]
+
+
+def test_plan_credits_pages_shared_only_between_victims_once():
+    """Regression: a page held by exactly the victims chosen so far frees
+    up once the LAST of them goes.  Per-victim exclusive counting credits
+    it to neither, so the loop would evict a third (healthy) resident."""
+    pool = PagedKVPool(n_pages=7, page_size=4)
+    # three high-priority decodes, each about to cross a page boundary
+    ds = [_seq(pool, plen=4, computed=4, state=RequestState.RUNNING,
+               slot=i, order=i) for i in range(3)]
+    # A commits a 2-page prompt; B shares A's first page + COW-forks the rest
+    req_a = _req(plen=8)
+    req_a.state = RequestState.RUNNING
+    req_a.num_computed_tokens = 8
+    pages_a = pool.allocate(req_a.req_id, 8)
+    pool.commit_prefix(req_a.req_id, req_a.prompt, 8)
+    seq_a = Sequence(request=req_a, slot=3, page_ids=pages_a,
+                     prefill_target=8, admit_order=3)
+    req_b = _req(plen=8)
+    req_b.state = RequestState.RUNNING
+    req_b.num_computed_tokens = 8
+    pages_b, matched, _ = pool.acquire_prefix(req_b.req_id, req_b.prompt)
+    assert matched == 7 and pool.refcount(pages_b[0]) == 2
+    seq_b = Sequence(request=req_b, slot=4, page_ids=pages_b,
+                     prefill_target=8, admit_order=4)
+    assert pool.free_pages == 0   # 3 decode + A's 2 + B's fork = 6 usable
+    sched = IterationScheduler(SchedulerConfig(max_slots=8))
+    plan = sched.plan_step([], ds + [seq_a, seq_b], pool)
+    # evicting B (fork) + A (its now-exclusive 2 pages, one of which was
+    # shared with B) yields the 3 pages the decodes need — no third victim
+    assert plan.preemptions == [seq_b, seq_a]
+    assert sorted(s.req_id for s, _ in plan.spans) == \
+        sorted(d.req_id for d in ds)
+
+
+def test_plan_charges_reclaimable_pages_consumed_by_a_hit():
+    """Regression: ``free_pages`` counts trie-cached reclaimable pages, but
+    an admission whose prefix match refcounts those very pages removes them
+    from the reclaimable set — the budget must charge for them, or a
+    mandatory decode gets starved at dispatch time."""
+    pool = PagedKVPool(n_pages=6, page_size=4)
+    committed = list(range(12))
+    dec = _seq(pool, plen=8, computed=8, state=RequestState.RUNNING,
+               slot=0, order=0)                   # 2 pages, next token needs 1
+    pool.allocate(99, 12)
+    pool.commit_prefix(99, committed, 12)
+    pool.free(99)                                 # 3 cached reclaimable pages
+    assert pool.free_pages == 3
+    hit = Request(prompt=committed, sampling=SamplingParams(max_new_tokens=4))
+    sched = IterationScheduler(SchedulerConfig(max_slots=4, chunk_size=8))
+    plan = sched.plan_step([hit], [dec], pool)
+    # the hit would pin 2 reclaimable pages + draw 1 fork page = the whole
+    # remaining capacity: with the decode's page charged first there is no
+    # room, so the admission must wait (it gets in once the decode settles)
+    assert [(s.req_id, n) for s, n in plan.spans] == [(dec.req_id, 1)]
+    assert plan.admissions == []
+    assert not plan.preemptions
+
+
 def test_hbm_cost_model_amortizes_batch():
     cm = HBMCostModel.from_model_config(CFG)
     one = cm.decode_step_ns(1, 64)
@@ -342,6 +631,47 @@ def test_paged_mixed_step_ragged_spans_write_only_their_span(params):
     np.testing.assert_array_equal(before[[1, 3, 4]], after[[1, 3, 4]])
     changed = (before[2] != after[2]).any(axis=(-2, -1))
     np.testing.assert_array_equal(changed, [False, True, False, False])
+
+
+def test_cow_copy_pages_device():
+    """Whole-page device copy across every layer's k/v arrays; other pages
+    (and sink->sink padding entries) are untouched."""
+    pool = T.init_paged_pool(CFG, 6, 4)
+    kp = pool["layers"]["attn"]["k_pages"]
+    pool["layers"]["attn"]["k_pages"] = kp.at[:, 2].set(1.5)
+    vp = pool["layers"]["attn"]["v_pages"]
+    pool["layers"]["attn"]["v_pages"] = vp.at[:, 2].set(-2.5)
+    before = jax.tree_util.tree_map(np.asarray, pool)
+    new = T.cow_copy_pages(pool, jnp.asarray([2, 0]), jnp.asarray([4, 0]))
+    for name, want in (("k_pages", 1.5), ("v_pages", -2.5)):
+        arr = np.asarray(new["layers"]["attn"][name])
+        np.testing.assert_array_equal(arr[:, 4], arr[:, 2])
+        assert (arr[:, 4] == want).all()
+        np.testing.assert_array_equal(arr[:, [0, 1, 3, 5]],
+                                      before["layers"]["attn"][name]
+                                      [:, [0, 1, 3, 5]])
+
+
+def test_write_start_confines_span_writes_to_private_pages(params):
+    """The device write-mask derived from the COW fork point: positions of a
+    span that fall below ``write_start`` are redirected to the sink, so a
+    shared prefix page cannot be written even if the host (erroneously)
+    schedules a span across it."""
+    B, pg, MP = 1, 4, 4
+    pool = T.init_paged_pool(CFG, 1 + MP, pg)
+    pt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, 4), 0, CFG.vocab)
+    before = np.asarray(pool["layers"]["attn"]["k_pages"])
+    # span covers positions 2..5; fork point at 4: positions 2,3 (page 1,
+    # nominally shared) must NOT be written, 4,5 (page 2) must be
+    _, pool = T.paged_mixed_step(
+        params, tokens, jnp.asarray([2], jnp.int32),
+        jnp.asarray([4], jnp.int32), pt, pool, CFG,
+        write_start=jnp.asarray([4], jnp.int32))
+    after = np.asarray(pool["layers"]["attn"]["k_pages"])
+    np.testing.assert_array_equal(before[:, 1], after[:, 1])  # shared page
+    changed = (before[0, 2] != after[0, 2]).any(axis=(-2, -1))
+    np.testing.assert_array_equal(changed, [True, True, False, False])
 
 
 # ---------------------------------------------------------------------------
@@ -484,6 +814,98 @@ def test_preemption_under_tiny_pool_is_token_identical(params):
         np.testing.assert_array_equal(ref, np.asarray(r.output_tokens))
     eng.pool_host.check_invariants()
     assert eng.pool_host.free_pages == eng.pool_host.n_pages - 1
+
+
+def _shared_prefix_prompts(n=4, prefix_len=32, tail=3):
+    """n prompts sharing a synthetic system prefix, with distinct tails."""
+    sys_p = list(np.asarray(jax.random.randint(
+        jax.random.PRNGKey(40), (prefix_len,), 0, CFG.vocab)))
+    return [np.asarray(sys_p + [(17 * i + j) % CFG.vocab
+                                for j in range(tail + i % 2)], np.int32)
+            for i in range(n)]
+
+
+def test_prefix_sharing_greedy_token_identical_and_saves_work(params):
+    """Acceptance: greedy outputs are token-identical with prefix sharing
+    on vs off, while sharing computes strictly fewer prefill tokens and
+    reports its hits.  Requests are staggered so the first sequence's
+    committed pages are matchable by the rest (simultaneous identical
+    prefills cannot share — nothing is committed yet)."""
+    prompts = _shared_prefix_prompts(n=4, prefix_len=32)
+
+    def run(sharing):
+        eng = ContinuousBatchingEngine(CFG, params, max_slots=4, page_size=4,
+                                       max_len=64, prefix_sharing=sharing)
+        reqs = []
+        for p in prompts:           # staggered arrivals: one step per submit
+            reqs.append(eng.add_request(p, SamplingParams(max_new_tokens=6)))
+            for _ in range(12):     # let the head request commit its prefix
+                eng.step()
+        eng.run()
+        eng.pool_host.check_invariants()
+        assert eng.pool_host.free_pages == eng.pool_host.n_pages - 1
+        return eng, [r.output_tokens for r in reqs]
+
+    eng_on, out_on = run(True)
+    eng_off, out_off = run(False)
+    assert out_on == out_off
+    single = ServeEngine(CFG, params, max_len=64)
+    for p, toks in zip(prompts, out_on):
+        ref = np.asarray(single.generate(
+            jnp.asarray(p)[None], GenerationConfig(max_new_tokens=6)))[0]
+        np.testing.assert_array_equal(ref, np.asarray(toks))
+    # the sharing run actually shared: hits cover most of 3 x 32-token
+    # prefixes, prefill work shrinks accordingly, and stats surface it
+    assert eng_on.stats["prefix_hit_tokens"] >= 3 * 24
+    assert eng_off.stats["prefix_hit_tokens"] == 0
+    assert eng_on.stats["prefill_tokens"] \
+        <= eng_off.stats["prefill_tokens"] - 3 * 24
+    assert eng_on.pool_host.pages_allocated_total \
+        < eng_off.pool_host.pages_allocated_total
+    st_ = eng_on.pool_host.stats()
+    assert st_.prefix_hit_tokens == eng_on.stats["prefix_hit_tokens"]
+    assert 0.0 < st_.prefix_hit_rate <= 1.0
+
+
+def test_prefix_sharing_token_identical_through_preemption(params):
+    """Acceptance: a tiny pool forces preemption of sequences that HOLD
+    shared pages; refcount release + trie re-match on resume keeps greedy
+    output token-identical to the unshared and uncontended runs."""
+    prompts = _shared_prefix_prompts(n=4, prefix_len=16)
+    single = ServeEngine(CFG, params, max_len=64)
+
+    def run(sharing, n_pages):
+        eng = ContinuousBatchingEngine(
+            CFG, params, max_slots=4, page_size=4, max_len=48,
+            n_pages=n_pages, chunk_size=8, prefix_sharing=sharing)
+        reqs = []
+        for p in prompts:
+            reqs.append(eng.add_request(p, SamplingParams(max_new_tokens=6)))
+            eng.step()
+        eng.run()
+        eng.pool_host.check_invariants()
+        return eng, reqs
+
+    eng, reqs = run(True, n_pages=11)   # deliberately starved
+    assert eng.stats["preemptions"] > 0, "tiny pool never preempted"
+    assert eng.stats["prefix_hit_tokens"] > 0, "nothing was ever shared"
+    for p, r in zip(prompts, reqs):
+        ref = np.asarray(single.generate(
+            jnp.asarray(p)[None], GenerationConfig(max_new_tokens=6)))[0]
+        np.testing.assert_array_equal(ref, np.asarray(r.output_tokens))
+
+
+def test_add_request_reports_prefix_hint(params):
+    eng = ContinuousBatchingEngine(CFG, params, max_slots=2, page_size=4,
+                                   max_len=48)
+    prompt = list(range(12))
+    r1 = eng.add_request(prompt, SamplingParams(max_new_tokens=2))
+    assert r1.num_cached_tokens == 0
+    eng.run()
+    r2 = eng.add_request(prompt, SamplingParams(max_new_tokens=2))
+    assert r2.num_cached_tokens == 11   # full hit minus the resampled token
+    eng.run()
+    assert r2.output_tokens == r1.output_tokens
 
 
 def test_continuous_generate_compat_api(params):
