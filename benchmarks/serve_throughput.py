@@ -28,6 +28,21 @@ tails; without sharing each recomputes and re-stores the whole prefix.
 Reports pages actually allocated and prefill tokens actually computed —
 greedy outputs are asserted identical across sharing on/off.
 
+Part 4 (kv_quant sweep): KV page dtype at an EQUAL pool byte budget.  The
+fp32 cell reuses Part 2's tight-pool config (the one that forces 9-10
+preemptions); the int8/bf16 cells get the same byte budget, which the
+dtype-aware pool converts into ~4x/2x the page count — so the same
+staggered workload preempts less (int8 must preempt strictly less than
+fp32, asserted) while greedy outputs stay >= 95% token-identical to the
+fp32-KV run (asserted).  Also reports the page-capacity ratio (>= 2x for
+int8, asserted — the acceptance criterion).
+
+Cost models are constructed ONCE per (name, config) via ``_cost_model`` and
+reused across every sweep cell and warm-up pass — a ``CIMCostModel`` runs
+the paper's simulator at construction, so rebuilding it per cell was pure
+benchmark wall-clock waste (no behavior change: the instance is stateless
+after init).
+
 Emits BENCH_serving.json:
   {"results": [{"concurrency": N, "baseline_tok_s": ..., ...}, ...],
    "chunked": [{"cost_model": "hbm", "chunk": 16, "pool": "tight",
@@ -37,6 +52,8 @@ Emits BENCH_serving.json:
                "pages_allocated": {"shared": ..., "exclusive": ...},
                "prefill_tokens": {"shared": ..., "exclusive": ...},
                "page_reduction": ..., "prefill_reduction": ..., ...}, ...],
+   "kv_quant": [{"kv_dtype": "int8", "pool_bytes": ..., "n_pages": ...,
+                 "preemptions": ..., "agreement_vs_fp32": ..., ...}, ...],
    "outputs_match": true}
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
@@ -60,6 +77,32 @@ from repro.serving.request import SamplingParams
 CFG = ModelConfig(name="bench", d_model=128, n_layers=2, n_heads=4,
                   n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
 
+_COST_MODELS: dict = {}
+
+
+def _cost_model(name: str, seq_len: int, kv_dtype: str = None):
+    """One cost model instance per (name, seq_len, kv_dtype), shared by
+    every sweep cell and warm-up pass that prices with it.  CIMCostModel
+    runs the CIM simulator at construction — building it once per cell
+    (let alone per step) is wasted wall clock; the instances are stateless
+    after init, so reuse cannot change any measured number.  ``kv_dtype``
+    prices the KV stream at the stored page width (the kv_quant sweep's
+    scheduling decisions must shift with the compression); None keeps each
+    model's historical default."""
+    key = (name, seq_len, kv_dtype)
+    if key not in _COST_MODELS:
+        from repro.core.quant import KV_DTYPE_BYTES
+
+        if name == "hbm":
+            kw = {} if kv_dtype is None else {"kv_dtype": kv_dtype}
+            _COST_MODELS[key] = HBMCostModel.from_model_config(CFG, **kw)
+        else:
+            kw = {} if kv_dtype is None else {
+                "kv_bits": int(8 * KV_DTYPE_BYTES[kv_dtype])}
+            _COST_MODELS[key] = CIMCostModel(CFG, strategy="sparse",
+                                             seq_len=seq_len, **kw)
+    return _COST_MODELS[key]
+
 
 def _baseline(params, prompts, gen, max_len):
     """Seed serving path: each request runs alone through a B=1 engine."""
@@ -81,7 +124,7 @@ def _continuous(params, prompts, gen, max_len, max_slots):
 
 def _instrumented(params, prompts, gen, *, max_len, max_slots, chunk=None,
                   n_pages=None, cost_model=None, slo_ns=None, stagger=0,
-                  warm=True):
+                  warm=True, **engine_kw):
     """Latency profile of one engine configuration: syncs the device after
     every ``step()`` (so each step's wall time is real, at the cost of the
     pipelining the throughput pass keeps), staggering arrivals so prefill
@@ -92,7 +135,8 @@ def _instrumented(params, prompts, gen, *, max_len, max_slots, chunk=None,
 
     kw = dict(max_slots=max_slots, page_size=8, max_len=max_len,
               cost_model=cost_model,
-              scheduler_cfg=SchedulerConfig(step_latency_budget_ns=slo_ns))
+              scheduler_cfg=SchedulerConfig(step_latency_budget_ns=slo_ns),
+              **engine_kw)
     if chunk is not None:
         kw["chunk_size"] = chunk
     if n_pages is not None:
@@ -103,7 +147,7 @@ def _instrumented(params, prompts, gen, *, max_len, max_slots, chunk=None,
                                        temperature=gen.temperature),
                       max_len=max_len, max_slots=max_slots, chunk=chunk,
                       n_pages=n_pages, cost_model=cost_model, slo_ns=slo_ns,
-                      stagger=stagger, warm=False)
+                      stagger=stagger, warm=False, **engine_kw)
     eng = ContinuousBatchingEngine(CFG, params, **kw)
     reqs = []
 
@@ -149,6 +193,7 @@ def _instrumented(params, prompts, gen, *, max_len, max_slots, chunk=None,
     outs = np.zeros((len(reqs), gen.max_new_tokens), np.int32)
     for i, r in enumerate(reqs):
         outs[i, :len(r.output_tokens)] = r.output_tokens
+    ps = eng.pool_host.stats()
     metrics = {
         "decode_p50_ms": float(np.percentile(waited, 50)),
         "decode_p95_ms": float(np.percentile(waited, 95)),
@@ -158,6 +203,9 @@ def _instrumented(params, prompts, gen, *, max_len, max_slots, chunk=None,
         "tok_s": eng.stats["tokens_out"] / wall,
         "sim_latency_us": eng.stats["sim_latency_ns"] / 1e3,
         "sim_energy_uj": eng.stats["sim_energy_nj"] / 1e3,
+        "n_pages": ps.n_pages,
+        "page_bytes": ps.page_bytes,
+        "pool_bytes": ps.pool_bytes,
     }
     return metrics, outs
 
@@ -226,10 +274,7 @@ def run_chunk_sweep(params, *, chunk_sizes, prompt_len, new_tokens,
     rows = []
     all_match = True
     for cm_name in cost_models:
-        if cm_name == "hbm":
-            cost = HBMCostModel.from_model_config(CFG)
-        else:
-            cost = CIMCostModel(CFG, strategy="sparse", seq_len=prompt_len)
+        cost = _cost_model(cm_name, seq_len=prompt_len)
         # arm the step SLO: a full-width decode batch plus a mid-size (32
         # token) chunk must fit.  HBM prefill is weight-pass-dominated so
         # big chunks still fit; CIM prefill is linear per token, so the
@@ -267,10 +312,7 @@ def run_prefix_sweep(params, *, prefix_lens, concurrencies, new_tokens,
     rows = []
     all_match = True
     for cm_name in cost_models:
-        if cm_name == "hbm":
-            cost = HBMCostModel.from_model_config(CFG)
-        else:
-            cost = CIMCostModel(CFG, strategy="sparse", seq_len=128)
+        cost = _cost_model(cm_name, seq_len=128)
         for plen in prefix_lens:
             sysp = np.asarray(jax.random.randint(
                 jax.random.PRNGKey(7), (plen,), 0, CFG.vocab))
@@ -338,6 +380,51 @@ def run_prefix_sweep(params, *, prefix_lens, concurrencies, new_tokens,
     return rows, all_match
 
 
+def run_kv_quant_sweep(params, *, kv_dtypes, prompt_len, new_tokens,
+                       n_requests, max_slots, chunk=16, cost_model="hbm"):
+    """KV page dtype at an EQUAL pool byte budget, over the chunk sweep's
+    tight-pool config (the PR 3 setup that forces preemption at fp32).
+
+    The fp32 cell fixes the byte budget; every other dtype converts that
+    same budget into its own (larger) page count.  Each cell runs the same
+    staggered workload and reports preemptions, page capacity and greedy
+    token agreement against the fp32-KV outputs."""
+    gen = GenerationConfig(max_new_tokens=new_tokens)
+    max_len = prompt_len + new_tokens + 8
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(300 + i),
+        (prompt_len if i % 2 else prompt_len // 4,), 0, CFG.vocab))
+        for i in range(n_requests)]
+
+    from repro.core.quant import kv_page_bytes
+
+    # PR 3 tight pool: barely more than ONE request's worst-case footprint
+    pages_max = -(-(prompt_len + new_tokens) // 8)
+    tight_pages = 1 + pages_max + max(1, pages_max // 4)
+    budget = (tight_pages - 1) * kv_page_bytes(
+        CFG.n_layers, CFG.n_kv_heads, CFG.hd, 8, "fp32")
+
+    assert kv_dtypes[0] == "fp32", "fp32 first: it is the agreement baseline"
+    rows = []
+    outs = {}
+    for kv in kv_dtypes:
+        # per-cell cost model at the cell's stored KV width: scheduling
+        # (admission/chunking/preemption) must shift with the compression
+        cost = _cost_model(cost_model, seq_len=prompt_len, kv_dtype=kv)
+        m, o = _instrumented(
+            params, prompts, gen, max_len=max_len, max_slots=max_slots,
+            chunk=chunk, cost_model=cost, stagger=2,
+            kv_dtype=kv, pool_bytes=budget)
+        outs[kv] = o
+        agree = float((outs["fp32"] == o).mean())
+        rows.append({"kv_dtype": kv, "budget_bytes": budget,
+                     "agreement_vs_fp32": agree, **m})
+        print(f"  [{cost_model}] kv={kv:5} pages={m['n_pages']:3d} "
+              f"({m['page_bytes']} B/page) preempt={m['preemptions']:2d} "
+              f"tok/s={m['tok_s']:6.1f} agree={agree:.2%}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -362,6 +449,10 @@ def main():
         prefix, m3 = run_prefix_sweep(
             params, prefix_lens=(120, 128), concurrencies=(8,),
             new_tokens=new_tokens, cost_models=("hbm",))
+        print("kv-quant sweep (smoke):")
+        kv_quant = run_kv_quant_sweep(
+            params, kv_dtypes=("fp32", "int8"), prompt_len=24,
+            new_tokens=new_tokens, n_requests=4, max_slots=2, chunk=8)
     else:
         results, m1 = run_throughput(params, (1, 2, 4, 8), prompt_len=16,
                                      new_tokens=args.new_tokens)
@@ -374,10 +465,14 @@ def main():
         prefix, m3 = run_prefix_sweep(
             params, prefix_lens=(32, 120, 128), concurrencies=(2, 8),
             new_tokens=args.new_tokens, cost_models=("hbm", "cim"))
+        print("kv-quant sweep:")
+        kv_quant = run_kv_quant_sweep(
+            params, kv_dtypes=("fp32", "bf16", "int8"), prompt_len=48,
+            new_tokens=args.new_tokens, n_requests=6, max_slots=4)
     all_match = m1 and m2 and m3
     payload = {"bench": "serving_throughput", "smoke": args.smoke,
                "results": results, "chunked": chunked, "prefix": prefix,
-               "outputs_match": all_match}
+               "kv_quant": kv_quant, "outputs_match": all_match}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
@@ -398,6 +493,22 @@ def main():
         r = accept[0]
         print(f"prefix sharing at 128x8: {r['page_reduction']:.1f}x fewer "
               f"pages, {r['prefill_reduction']:.1f}x fewer prefill tokens")
+    # acceptance (kv_quant, at the PR 3 tight-pool config under an EQUAL
+    # byte budget): int8 KV holds >= 2x the fp32 page capacity, completes
+    # with STRICTLY fewer preemptions, and stays >= 95% token-identical
+    kq = {r["kv_dtype"]: r for r in kv_quant}
+    fp32, int8 = kq["fp32"], kq["int8"]
+    assert fp32["preemptions"] > 0, (
+        "tight-pool fp32 cell never preempted — the kv_quant sweep is not "
+        "exercising pool pressure", fp32)
+    assert int8["n_pages"] >= 2 * fp32["n_pages"], (int8, fp32)
+    assert int8["preemptions"] < fp32["preemptions"], (int8, fp32)
+    assert int8["agreement_vs_fp32"] >= 0.95, int8
+    print(f"int8 KV at equal byte budget: {int8['n_pages']}/"
+          f"{fp32['n_pages']} pages "
+          f"({int8['n_pages'] / fp32['n_pages']:.1f}x capacity), "
+          f"preemptions {fp32['preemptions']} -> {int8['preemptions']}, "
+          f"greedy agreement {int8['agreement_vs_fp32']:.1%}")
     at8 = [r for r in results if r["concurrency"] == 8]
     if at8:
         print(f"speedup at 8 concurrent: {at8[0]['speedup']:.2f}x")

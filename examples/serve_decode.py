@@ -13,7 +13,9 @@ every request, demonstrating refcounted prefix sharing: later arrivals
 match the pages the first request committed to the prefix trie and skip
 recomputing (and re-storing) the shared prefix — the exit report prints
 pages saved and prefill tokens skipped.  ``--no-prefix-sharing`` turns the
-trie off for comparison.
+trie off for comparison.  ``--kv-dtype int8`` serves quantized KV pages
+(per-(page, head) fp32 scales, in-kernel dequant) — the exit report prints
+the pool's physical bytes, a quarter of fp32 per page.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--arch mamba2-2_7b]
       (SSM/hybrid archs fall back to the legacy single-batch engine)
@@ -59,6 +61,10 @@ def main():
                     help="per-block quantized Monarch factors at load")
     ap.add_argument("--fuse", action="store_true",
                     help="fuse QKV / gate-up projections at load")
+    ap.add_argument("--kv-dtype", choices=["fp32", "bf16", "int8"],
+                    default=None,
+                    help="stored KV page width (int8: quantized pages with "
+                         "per-(page, head) scales; default: model dtype)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -79,16 +85,22 @@ def main():
         print("serve OK")
         return
 
-    from repro.core.quant import BITS_BY_NAME
+    from repro.core.quant import BITS_BY_NAME, KV_DTYPE_BYTES
 
     wbits = BITS_BY_NAME.get(args.quantize, 8)
+    # resolve the page width exactly like the engine will (None = model
+    # dtype), so the cost model prices the KV stream the pool actually serves
+    kv_resolved = args.kv_dtype or (
+        "bf16" if cfg.dtype == "bfloat16" else "fp32")
+    kv_bits = int(8 * KV_DTYPE_BYTES[kv_resolved])
     cost = None
     if args.cost_model == "cim":
         cost = CIMCostModel(cfg, strategy="sparse", seq_len=128,
-                            weight_bits=wbits, fused_proj=args.fuse)
+                            weight_bits=wbits, fused_proj=args.fuse,
+                            kv_bits=kv_bits)
         print(f"CIM cost model: {cost.per_token_ns:.0f} ns/token, "
               f"{cost.per_token_nj:.0f} nJ/token (sparse mapping, "
-              f"{wbits}-bit cells)")
+              f"{wbits}-bit cells, {kv_bits}-bit KV stream)")
 
     max_len = 64 + args.system_prompt
     n_pages = None
@@ -105,12 +117,14 @@ def main():
                                       max_step_tokens=64),
         use_paged_kernel=args.paged_kernel,
         quantize=args.quantize, fuse_projections=args.fuse,
-        prefix_sharing=not args.no_prefix_sharing)
+        prefix_sharing=not args.no_prefix_sharing,
+        kv_dtype=args.kv_dtype)
     if args.cost_model == "hbm":
         # price weight traffic by the tree the engine actually serves
-        # (post fuse/quantize), not the fp32 default
+        # (post fuse/quantize) and the KV stream by the stored page width,
+        # not the fp32 defaults
         engine.scheduler.cost_model = HBMCostModel.from_params(
-            cfg, engine.params)
+            cfg, engine.params, kv_dtype=engine.kv_dtype)
     if args.quantize or args.fuse:
         from repro.core.quant import tree_weight_bytes
 
@@ -160,6 +174,9 @@ def main():
     ps = engine.pool_host.stats()
     print(f"pool at exit: {ps.allocated_pages}/{ps.n_pages} pages allocated, "
           f"{ps.free_pages} free, {ps.cached_pages} cached for reuse")
+    print(f"pool bytes ({ps.kv_dtype} pages, {ps.page_bytes} B/page): "
+          f"{ps.allocated_bytes / 1e3:.1f} of {ps.pool_bytes / 1e3:.1f} kB "
+          f"physically pinned")
     if args.system_prompt and not args.no_prefix_sharing:
         pool = engine.pool_host
         naive = sum(pool.pages_for(r.total_len) for r in finished)

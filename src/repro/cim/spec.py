@@ -74,6 +74,21 @@ PAPER_ADC_BITS = {"linear": 8, "sparse": 5, "dense": 3}
 # same resolution/latency/energy trade the Fig. 8 ADC-sharing DSE
 # (benchmarks/fig8_adc_dse.py) sweeps explicitly via ``adc_bits_override``
 # — the DSE explores the knob, the weight width bounds it.
+#
+# The same correspondence covers the KV cache.  CIM storage is inherently
+# low-precision — a crossbar cell holds a few bits, and whatever buffers the
+# attention DPU reads its K/V stream from is calibrated per array, not per
+# element — so the serving pool's quantized KV pages (``core.quant``: int8
+# rows with ONE fp32 scale per (page, kv_head), K and V independent) are the
+# digital twin of a per-crossbar ADC full-scale range over the array
+# holding that page's keys (or values): the page is the hardware residency
+# granule, the head is its column group, and the periphery re-scales column
+# sums by the page scale exactly as the paged-attention kernel multiplies
+# the gathered int8 page by its scale row in VMEM.  A page's scale only
+# ever grows while the page fills (append-only history), which is the ADC
+# range-tracking discipline of programming an array: widen the full-scale,
+# re-normalize what is already stored, never touch a committed array —
+# shared (immutable) pages keep their conversion range forever.
 
 
 @dataclasses.dataclass(frozen=True)

@@ -154,6 +154,20 @@ def bart_large() -> ModelDesc:
     )
 
 
+def decode_kv_bytes_per_token(cfg, kv_bits: int = 32) -> float:
+    """Bytes of KV cache one token appends (and every later decode step
+    re-reads) across the stack, at the STORED width of the serving pool's
+    pages: ``kv_bits`` is 32 for fp32 pages, 16 bf16, 8 int8.  Shared by
+    both serving cost models — the HBM roofline streams these bytes per
+    gathered key, and the CIM DPU term clocks its digital attention
+    matmuls on the same movement (weights sit in the arrays; the KV stream
+    is what scales with context) — so admission, chunking and preemption
+    decisions all shift when the pool compresses.  The int8 pool's
+    per-(page, head) fp32 scales are O(1/page_size) of the rows and are
+    deliberately left out of the per-token figure."""
+    return 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * (kv_bits / 8.0)
+
+
 def decode_workload(cfg, seq_len: int = 512,
                     fused_proj: bool = False) -> ModelDesc:
     """ModelDesc for one decode step of a ``repro.models.config.ModelConfig``
@@ -227,5 +241,6 @@ __all__ = [
     "bart_large",
     "gpt2_medium",
     "decode_workload",
+    "decode_kv_bytes_per_token",
     "PAPER_MODELS",
 ]

@@ -174,10 +174,125 @@ def tree_weight_bytes(params: Any) -> int:
                if hasattr(leaf, "dtype"))
 
 
+# ---------------------------------------------------------------------------
+# KV-cache page quantization (paged serving pool)
+# ---------------------------------------------------------------------------
+#
+# After the weights are compressed (above), the KV cache is the dominant
+# byte stream per decoded token AND the binding resource in the paged pool.
+# Pages are stored int8 with ONE fp32 scale per (page, kv_head) — K and V
+# scaled independently — the software twin of a per-crossbar ADC full-scale
+# range, exactly like the per-block weight scales (cim/spec.py documents the
+# correspondence).  The scale buffers are parallel pool arrays owned by the
+# engine's device pool, copied together with their pages on COW forks.
+#
+# Pages are append-only (the serving cursor walks positions monotonically
+# and shared pages are immutable history), so scales only ever need to GROW
+# while a page is being filled: ``quantize_kv_write`` scatter-maxes the new
+# rows' absmax into the page scales, rescales already-stored rows where the
+# scale grew (a bitwise no-op where it did not: round(q * 1.0) == q), and
+# quantizes the new rows under the final scale.  A row landing at offset 0
+# is the page's first write, which resets the scale — a page recycled from
+# a freed sequence must not inherit its previous owner's dynamic range.
+
+KV_QMAX = 127.0
+# engine/pool ``kv_dtype`` mode names -> stored bytes per KV element
+KV_DTYPE_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 1.0}
+
+
+def kv_page_bytes(n_layers: int, n_kv_heads: int, head_dim: int,
+                  page_size: int, kv_dtype: str = "fp32") -> int:
+    """Physical bytes one KV page pins across the whole stack: k+v rows at
+    the stored width, plus (int8 only) the per-(page, head) fp32 scales.
+    This is what a byte-budgeted pool divides by — int8 pages are ~4x
+    denser than fp32, so the same budget yields ~4x the page count."""
+    try:
+        itemsize = KV_DTYPE_BYTES[kv_dtype]
+    except KeyError:
+        raise ValueError(
+            f"kv_dtype must be one of {sorted(KV_DTYPE_BYTES)}, "
+            f"got {kv_dtype!r}") from None
+    data = 2 * n_layers * n_kv_heads * head_dim * page_size * itemsize
+    scales = 2 * n_layers * n_kv_heads * 4 if kv_dtype == "int8" else 0
+    return int(data) + scales
+
+
+def quantize_kv_page(rows: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One full page (page_size, KV, hd) -> (int8 values, (KV,) fp32 scales):
+    symmetric per-(page, head), range ±KV_QMAX."""
+    rows = rows.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(rows), axis=(-3, -1))          # (..., KV)
+    scale = jnp.where(amax > 0, amax / KV_QMAX, 1.0)
+    q = jnp.clip(jnp.round(rows / scale[..., None, :, None]),
+                 -KV_QMAX, KV_QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv_pages(pages: jax.Array, scales: jax.Array) -> jax.Array:
+    """(P, page, KV, hd) int8 x (P, KV) fp32 -> fp32 pages.  The single
+    cast-multiply the paged-attention kernel runs in VMEM — sharing this op
+    keeps the dequant-then-attend oracle bitwise-comparable."""
+    return pages.astype(jnp.float32) * scales[..., None, :, None]
+
+
+def quantize_kv_write(pages: jax.Array, scales: jax.Array, phys: jax.Array,
+                      off: jax.Array, rows: jax.Array,
+                      rescale_phys: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Scatter new K (or V) span rows into the int8 page pool, maintaining
+    the per-(page, head) scales.
+
+    pages: (P, page, KV, hd) int8; scales: (P, KV) fp32;
+    phys/off: (B, S) physical page / row offset per span position (positions
+    the caller masked out must already be redirected to the sink page, like
+    the fp32 write path); rows: (B, S, KV, hd) freshly computed K or V.
+    ``rescale_phys``: optional (B, K) page set to run the stored-row rescale
+    over instead of ``phys`` — it must cover every non-sink page ``phys``
+    names (extra pages are harmless: their ratio is exactly 1.0, a bitwise
+    no-op).  The caller can hand a deduplicated per-logical-page set
+    (``ceil(S / page) + 1`` entries instead of S), which matters because
+    the rescale gathers and rewrites whole pages.
+
+    Invariant: every stored row is quantized under a scale covering every
+    row the page has received since its (re)birth.  Three steps keep it:
+      1. rows at offset 0 are a page's first write (the cursor is
+         monotonic), so their page's scale is reset — no dynamic range
+         inherited from a previous owner of a recycled page;
+      2. the span rows' per-head absmax is scatter-maxed into the scales;
+      3. stored rows are rescaled by old/new where the scale grew.  Where
+         it did not, the ratio is exactly 1.0 and ``round(q * 1.0) == q``
+         bitwise — untouched pages (all shared/committed history) come out
+         bit-identical, which is what keeps sharing exact.
+    """
+    rows = rows.astype(jnp.float32)
+    reset = jnp.where(off == 0, phys, 0)                  # sink absorbs rest
+    scales0 = scales.at[reset].set(0.0)
+    amax = jnp.max(jnp.abs(rows), axis=-1)                # (B, S, KV)
+    new_scales = scales0.at[phys].max(amax / KV_QMAX)     # (P, KV)
+    # rescale ONLY the touched pages (gather-modify-scatter): the ratio can
+    # differ from 1.0 nowhere else, and touching the whole pool would
+    # read+rewrite O(pool) bytes per layer per step — the very traffic int8
+    # pages exist to remove.  Duplicate entries scatter identical content
+    # (same ratio, same source rows), so the result is deterministic.
+    # new_scales == 0 implies scales0 == 0 (max never shrinks), so the
+    # guarded division is exact: equal scales give ratio exactly 1.0.
+    rp = phys if rescale_phys is None else rescale_phys
+    ratio = jnp.where(new_scales > 0, scales0 / new_scales, 1.0)[rp]
+    rescaled = jnp.round(pages[rp].astype(jnp.float32)
+                         * ratio[:, :, None, :, None]).astype(jnp.int8)
+    pages = pages.at[rp].set(rescaled)
+    s = new_scales[phys]                                  # (B, S, KV)
+    q = jnp.clip(jnp.round(rows / jnp.where(s > 0, s, 1.0)[..., None]),
+                 -KV_QMAX, KV_QMAX).astype(jnp.int8)      # s==0 => rows==0
+    return pages.at[phys, off].set(q), new_scales
+
+
 __all__ = [
     "QMAX", "BITS_BY_NAME", "block_scales", "pack_int4", "unpack_int4",
     "quantize_factor", "dequantize_factor",
     "quantize_monarch", "dequantize_monarch",
     "is_quantized", "quant_bits", "quantized_out_dim",
     "quant_error_stats", "quantize_tree", "tree_weight_bytes",
+    "KV_QMAX", "KV_DTYPE_BYTES", "kv_page_bytes",
+    "quantize_kv_page", "dequantize_kv_pages", "quantize_kv_write",
 ]

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bdmm import bdmm, bdmm_q
-from repro.kernels.monarch import fused_fits, monarch_fused, monarch_fused_q
+from repro.kernels.monarch import (VMEM_BUDGET_BYTES, fused_fits,
+                                   monarch_fused, monarch_fused_q)
 
 
 @functools.lru_cache(maxsize=None)
@@ -94,9 +95,37 @@ def bdmm_mm(x: jax.Array, w: jax.Array) -> jax.Array:
     return y.reshape(*batch, k, w.shape[1])
 
 
+@functools.lru_cache(maxsize=None)
+def paged_span_fits(span: int, n_heads: int, head_dim: int,
+                    page_size: int, n_kv_heads: int, kv_bytes: float,
+                    scale_bytes: int = 0) -> bool:
+    """Does one grid step of the paged-attention span kernel fit VMEM?
+
+    Sums ONE grid step's working set against the same budget the Monarch
+    dispatch uses: the query span block, BOTH gathered k/v page blocks at
+    their **stored** width (``kv_bytes``: 4 fp32, 2 bf16, 1 int8), the
+    per-(page, head) KV scale rows plus the fp32 dequant temporaries of
+    the quantized path (``scale_bytes`` > 0 flags it — the kernel
+    materializes fp32 copies of both pages next to the pinned int8
+    blocks), the fp32 flash scratch (running max / normalizer /
+    accumulator) and the output block.  Cached per shape because
+    ``_paged_attend`` consults it per layer per engine step.  (Interpret
+    mode stays the paged kernel's own decision — ``kernels.paged``
+    resolves it per backend.)"""
+    q_b = 4 * span * n_heads * head_dim
+    kv_b = 2 * page_size * n_kv_heads * head_dim * kv_bytes
+    dequant_b = 2 * 4 * page_size * n_kv_heads * head_dim if scale_bytes \
+        else 0
+    scratch_b = 4 * (2 * span * n_heads + span * n_heads * head_dim)
+    out_b = 4 * span * n_heads * head_dim
+    total = q_b + kv_b + dequant_b + scale_bytes + scratch_b + out_b
+    return total <= VMEM_BUDGET_BYTES
+
+
 def dispatch_cache_info():
     """Introspection for tests/benchmarks: the dispatch table's hit stats."""
     return _dispatch.cache_info()
 
 
-__all__ = ["monarch_mm", "monarch_mm_q", "bdmm_mm", "dispatch_cache_info"]
+__all__ = ["monarch_mm", "monarch_mm_q", "bdmm_mm", "paged_span_fits",
+           "dispatch_cache_info"]

@@ -18,6 +18,13 @@ causal within the span (query ``i`` sees keys at positions
 the old decode kernel; ``paged_attention`` keeps that single-query
 signature as a thin wrapper.
 
+Quantized KV pages (``core.quant``): when the pool stores int8 pages with
+per-(page, head) fp32 scales, the kernel DMAs the int8 page AND its scale
+row into VMEM and dequantizes in place (one cast + one multiply, fp32
+accumulate) — a quarter of the fp32 page bytes per gathered key.  The
+dequant is the same single op the host-side oracle runs, so the quantized
+kernel is bitwise-identical to the fp32 kernel fed pre-dequantized pages.
+
 Grid: (B, MP).  Scalar prefetch: page_table (B, MP), start (B,),
 span_len (B,), window (1,).  Scratch: per-(span, head) running max /
 normalizer / accumulator, persistent across the MP inner steps of one
@@ -31,6 +38,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,20 +46,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _paged_span_kernel(pt_ref, st_ref, sp_ref, win_ref, q_ref, k_ref, v_ref,
-                       o_ref, m_ref, l_ref, acc_ref, *, page_size: int):
-    b = pl.program_id(0)
-    i = pl.program_id(1)
-
+def _span_attend(b, i, st_ref, sp_ref, win_ref, q, k, v,
+                 o_ref, m_ref, l_ref, acc_ref, *, page_size: int):
+    """One flash step over a single (sequence, page) grid cell: fold the
+    fp32 page ``k``/``v`` into the running softmax for span queries ``q``."""
     @pl.when(i == 0)
     def _init():
         m_ref[:] = jnp.full_like(m_ref, -1e30)
         l_ref[:] = jnp.zeros_like(l_ref)
         acc_ref[:] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)       # (S, H, hd)
-    k = k_ref[0].astype(jnp.float32)       # (pg, KV, hd)
-    v = v_ref[0].astype(jnp.float32)
     S, H, hd = q.shape
     pg, KV, _ = k.shape
     g = H // KV
@@ -81,6 +85,32 @@ def _paged_span_kernel(pt_ref, st_ref, sp_ref, win_ref, q_ref, k_ref, v_ref,
         out = acc_ref[:] / jnp.maximum(l_ref[:], 1e-30)[..., None]
         valid = (jnp.arange(S) < sp_ref[b])[:, None, None]
         o_ref[0] = jnp.where(valid, out, 0.0).astype(o_ref.dtype)
+
+
+def _paged_span_kernel(pt_ref, st_ref, sp_ref, win_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, acc_ref, *, page_size: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)       # (S, H, hd)
+    k = k_ref[0].astype(jnp.float32)       # (pg, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    _span_attend(b, i, st_ref, sp_ref, win_ref, q, k, v,
+                 o_ref, m_ref, l_ref, acc_ref, page_size=page_size)
+
+
+def _paged_span_kernel_q(pt_ref, st_ref, sp_ref, win_ref, q_ref, k_ref,
+                         v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref,
+                         *, page_size: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                          # (S, H, hd)
+    # in-VMEM dequant: int8 page x its (KV,) per-(page, head) scale row —
+    # the same cast-multiply as core.quant.dequantize_kv_pages, so the
+    # result is bitwise what the fp32 kernel sees on dequantized pages
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0][None, :, None]
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0][None, :, None]
+    _span_attend(b, i, st_ref, sp_ref, win_ref, q, k, v,
+                 o_ref, m_ref, l_ref, acc_ref, page_size=page_size)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -118,19 +148,71 @@ def _paged_attention_span(q, k_pages, v_pages, page_table, start, span_len,
       q, k_pages, v_pages)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_attention_span_q(q, k_pages, v_pages, k_scales, v_scales,
+                            page_table, start, span_len, window, *,
+                            interpret: bool):
+    B, S, H, hd = q.shape
+    _, pg, KV, _ = k_pages.shape
+    MP = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, MP),
+        in_specs=[
+            pl.BlockSpec((1, S, H, hd),
+                         lambda b, i, pt, st, sp, wn: (b, 0, 0, 0)),
+            pl.BlockSpec((1, pg, KV, hd),
+                         lambda b, i, pt, st, sp, wn: (pt[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, pg, KV, hd),
+                         lambda b, i, pt, st, sp, wn: (pt[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, KV),
+                         lambda b, i, pt, st, sp, wn: (pt[b, i], 0)),
+            pl.BlockSpec((1, KV),
+                         lambda b, i, pt, st, sp, wn: (pt[b, i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, H, hd),
+                               lambda b, i, pt, st, sp, wn: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S, H), jnp.float32),
+            pltpu.VMEM((S, H), jnp.float32),
+            pltpu.VMEM((S, H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_span_kernel_q, page_size=pg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), start.astype(jnp.int32),
+      span_len.astype(jnp.int32), window.reshape(1).astype(jnp.int32),
+      q, k_pages, v_pages, k_scales.astype(jnp.float32),
+      v_scales.astype(jnp.float32))
+
+
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"  # Mosaic-only lowering
 
 
 def paged_attention_span(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                          page_table: jax.Array, start: jax.Array,
-                         span_len: jax.Array, window: jax.Array) -> jax.Array:
+                         span_len: jax.Array, window: jax.Array,
+                         k_scales: Optional[jax.Array] = None,
+                         v_scales: Optional[jax.Array] = None) -> jax.Array:
     """q: (B, S, H, hd) query spans — row ``b``'s query ``i`` sits at global
     position ``start[b] + i`` and is valid iff ``i < span_len[b]`` (invalid
     rows return zeros); k/v_pages: (P, page, KV, hd); page_table: (B, MP);
     window: int32 scalar sliding window (huge value = global).
+    ``k_scales``/``v_scales`` (P, KV): per-(page, head) fp32 scales of an
+    int8 page pool — when given, pages are dequantized in VMEM (fp32
+    accumulate) as they are gathered.
     Causal within the span: query ``i`` attends keys at positions
     ``<= start[b] + i`` only.  Returns (B, S, H, hd)."""
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be given together")
+    if k_scales is not None:
+        return _paged_attention_span_q(
+            q, k_pages, v_pages, k_scales, v_scales, page_table, start,
+            span_len, jnp.asarray(window), interpret=_interpret())
     return _paged_attention_span(q, k_pages, v_pages, page_table, start,
                                  span_len, jnp.asarray(window),
                                  interpret=_interpret())
@@ -138,17 +220,20 @@ def paged_attention_span(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, lengths: jax.Array,
-                    window: jax.Array) -> jax.Array:
+                    window: jax.Array,
+                    k_scales: Optional[jax.Array] = None,
+                    v_scales: Optional[jax.Array] = None) -> jax.Array:
     """Single-query decode special case (span of 1 per sequence).
 
     q: (B, H, hd) single-position queries; lengths: (B,) valid keys per row
     (current token included, so the query sits at position ``lengths - 1``).
-    Returns (B, H, hd)."""
+    ``k_scales``/``v_scales``: optional (P, KV) int8-page scales, as in
+    :func:`paged_attention_span`.  Returns (B, H, hd)."""
     B = q.shape[0]
-    out = _paged_attention_span(
+    out = paged_attention_span(
         q[:, None], k_pages, v_pages, page_table,
         lengths.astype(jnp.int32) - 1, jnp.ones((B,), jnp.int32),
-        jnp.asarray(window), interpret=_interpret())
+        jnp.asarray(window), k_scales=k_scales, v_scales=v_scales)
     return out[:, 0]
 
 

@@ -81,6 +81,24 @@ def paged_attention_span_ref(q: jax.Array, k_pages: jax.Array,
     return jnp.where(valid, out, 0.0).astype(q.dtype)
 
 
+def paged_attention_span_q_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, k_scales: jax.Array,
+                               v_scales: jax.Array, page_table: jax.Array,
+                               start: jax.Array, span_len: jax.Array,
+                               window) -> jax.Array:
+    """Dequant-then-attend oracle for the quantized paged-span kernel:
+    dequantize the whole int8 pool under its per-(page, head) scales with
+    ``core.quant``'s own cast-multiply (the single op the kernel runs in
+    VMEM), then the plain fp32 span oracle.  k/v_pages: (P, page, KV, hd)
+    int8; k/v_scales: (P, KV) fp32."""
+    from repro.core.quant import dequantize_kv_pages
+
+    return paged_attention_span_ref(
+        q, dequantize_kv_pages(k_pages, k_scales),
+        dequantize_kv_pages(v_pages, v_scales), page_table, start, span_len,
+        window)
+
+
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         page_table: jax.Array, lengths: jax.Array,
                         window) -> jax.Array:
@@ -97,4 +115,5 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
 
 __all__ = ["bdmm_ref", "monarch_ref", "bdmm_q_ref", "monarch_q_ref",
-           "paged_attention_ref", "paged_attention_span_ref"]
+           "paged_attention_ref", "paged_attention_span_ref",
+           "paged_attention_span_q_ref"]

@@ -297,18 +297,40 @@ def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> d
     }
 
 
-def paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int, dtype) -> dict:
+def paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int, dtype,
+                     kv_dtype: Optional[str] = None) -> dict:
     """One layer's share of the paged KV pool: ``n_pages`` fixed-size pages.
 
     Unlike the ring cache there is no batch dimension — sequences own
     disjoint page sets through their page tables, so one physical pool
     serves every slot of the continuous-batching engine.
+
+    ``kv_dtype`` selects the stored page width: None keeps the model
+    ``dtype`` (legacy behavior), "fp32"/"bf16" store pages at that float
+    width, and "int8" stores int8 pages plus one fp32 scale per
+    (page, kv_head) for K and V independently (``core.quant``) — the
+    parallel scale buffers ride the same pytree, so COW page copies and the
+    scanned layer stack thread them like any other pool array.
     """
     kv, hd = cfg.n_kv_heads, cfg.hd
-    return {
-        "k_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype=dtype),
-        "v_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype=dtype),
+    if kv_dtype is None:
+        page_dtype = dtype
+    elif kv_dtype == "fp32":
+        page_dtype = jnp.float32
+    elif kv_dtype == "bf16":
+        page_dtype = jnp.bfloat16
+    elif kv_dtype == "int8":
+        page_dtype = jnp.int8
+    else:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+    cache = {
+        "k_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype=page_dtype),
+        "v_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype=page_dtype),
     }
+    if kv_dtype == "int8":
+        cache["k_scales"] = jnp.zeros((n_pages, kv), jnp.float32)
+        cache["v_scales"] = jnp.zeros((n_pages, kv), jnp.float32)
+    return cache
 
 
 def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
@@ -330,8 +352,16 @@ def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
     ``write_start`` sit in prefix pages shared (refcounted) with other
     sequences — equally redirected, so span writes are provably confined to
     exclusively-owned pages no matter what spans the host schedules.
+
+    An int8 pool (cache carries ``k_scales``/``v_scales``, (P, KV) fp32
+    per-(page, head) scales) quantizes the fresh span rows on device before
+    the page write and dequantizes on read — in-kernel for the Pallas path,
+    on the gathered blocks for the dense fallback.  The write-mask
+    semantics above are unchanged: the same sink redirect guards the scale
+    updates, so shared pages and their scales stay immutable.
     """
     kp, vp = cache["k_pages"], cache["v_pages"]
+    quantized = "k_scales" in cache
     pg = kp.shape[1]
     B, S = q_pos.shape
     phys = jnp.take_along_axis(page_table, q_pos // pg, axis=1)  # (B,S)
@@ -343,28 +373,74 @@ def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
         if write_start is not None:
             valid &= q_pos >= write_start[:, None]
         phys = jnp.where(valid, phys, 0)  # page 0 is the reserved sink
-    kp = kp.at[phys, off].set(k)
-    vp = vp.at[phys, off].set(v)
-    new_cache = {"k_pages": kp, "v_pages": vp}
+    ks = vs = None
+    if quantized:
+        # quantize the freshly computed span rows on device before the page
+        # write: per-(page, head) scales grow to cover the new rows (stored
+        # rows rescale where needed; untouched — i.e. every shared/committed
+        # — page comes out bit-identical, see core.quant.quantize_kv_write).
+        # The sink redirect above applies to the scale updates too, so
+        # shared-prefix pages' scales are as immutable as their rows.
+        from repro.core.quant import quantize_kv_write  # lazy: optional path
+
+        # deduplicated rescale set: the span's logical page RANGE from the
+        # page table (ceil(S/pg)+1 entries/row, vs S per-position entries).
+        # It covers every non-sink page ``phys`` can name — including pages
+        # whose boundary positions were sink-redirected — and any extras
+        # (stalled rows, shared pages) rescale by exactly 1.0, a bitwise
+        # no-op.
+        nK = (S + pg - 1) // pg + 1
+        jcols = jnp.clip(q_pos[:, :1] // pg + jnp.arange(nK)[None, :],
+                         0, page_table.shape[1] - 1)
+        resc = jnp.take_along_axis(page_table, jcols, axis=1)  # (B, nK)
+        kp, ks = quantize_kv_write(kp, cache["k_scales"], phys, off, k,
+                                   rescale_phys=resc)
+        vp, vs = quantize_kv_write(vp, cache["v_scales"], phys, off, v,
+                                   rescale_phys=resc)
+        new_cache = {"k_pages": kp, "v_pages": vp,
+                     "k_scales": ks, "v_scales": vs}
+    else:
+        kp = kp.at[phys, off].set(k.astype(kp.dtype))
+        vp = vp.at[phys, off].set(v.astype(vp.dtype))
+        new_cache = {"k_pages": kp, "v_pages": vp}
 
     if cfg.paged_kernel and cfg.logit_softcap is None:
+        from repro.kernels.ops import paged_span_fits
         from repro.kernels.paged import (  # lazy: optional path
             paged_attention, paged_attention_span)
 
-        win = jnp.asarray(
-            1_000_000_000 if window is None else window, jnp.int32)
-        if S == 1 and span_len is None:
-            out = paged_attention(q[:, 0], kp, vp, page_table,
-                                  q_pos[:, 0] + 1, win)
-            return out[:, None], new_cache
-        sp = jnp.full((B,), S, jnp.int32) if span_len is None else span_len
-        out = paged_attention_span(q, kp, vp, page_table, q_pos[:, 0], sp,
-                                   win)
-        return out, new_cache
+        KV = kp.shape[2]
+        fits = paged_span_fits(
+            S, q.shape[2], q.shape[3], pg, KV, kp.dtype.itemsize,
+            scale_bytes=2 * 4 * KV if quantized else 0)
+        if fits:
+            win = jnp.asarray(
+                1_000_000_000 if window is None else window, jnp.int32)
+            if S == 1 and span_len is None:
+                out = paged_attention(q[:, 0], kp, vp, page_table,
+                                      q_pos[:, 0] + 1, win,
+                                      k_scales=ks, v_scales=vs)
+                return out[:, None], new_cache
+            sp = jnp.full((B,), S, jnp.int32) if span_len is None else span_len
+            out = paged_attention_span(q, kp, vp, page_table, q_pos[:, 0], sp,
+                                       win, k_scales=ks, v_scales=vs)
+            return out, new_cache
+        # else: the span block spills VMEM — dense-gather fallback below
 
     MP = page_table.shape[1]
-    kk = kp[page_table].reshape(B, MP * pg, *kp.shape[2:])  # (B,T,KV,hd)
-    vv = vp[page_table].reshape(B, MP * pg, *vp.shape[2:])
+    KVh = kp.shape[2:]
+    if quantized:
+        # gather the int8 pages (quarter the fp32 bytes), then dequantize
+        # the gathered blocks under their per-(page, head) scales
+        from repro.core.quant import dequantize_kv_pages
+
+        kk = dequantize_kv_pages(kp[page_table], ks[page_table]).astype(
+            dtype).reshape(B, MP * pg, *KVh)
+        vv = dequantize_kv_pages(vp[page_table], vs[page_table]).astype(
+            dtype).reshape(B, MP * pg, *KVh)
+    else:
+        kk = kp[page_table].reshape(B, MP * pg, *KVh)  # (B,T,KV,hd)
+        vv = vp[page_table].reshape(B, MP * pg, *KVh)
     kj = jnp.arange(MP * pg)[None, None, :]
     valid = kj <= q_pos[..., None]  # (B,S,T)
     if window is not None:

@@ -408,20 +408,29 @@ def prefill_with_cache(params, tokens: jax.Array, cache: dict, cfg: ModelConfig)
 # ---- paged serving (continuous batching) ----------------------------------
 
 
-def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
+def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                    kv_dtype: Optional[str] = None) -> dict:
     """Paged KV pool for the whole stack: per-layer page arrays, stacked on a
     leading layer axis so the scanned decoder threads them like any cache.
-    Page 0 is the sink page — free slots' page tables point at it."""
+    Page 0 is the sink page — free slots' page tables point at it.
+
+    ``kv_dtype`` ("fp32" | "bf16" | "int8" | None = model dtype) selects the
+    stored page width; "int8" adds per-layer (P, KV) fp32 scale buffers
+    (one scale per (page, head), K and V independent — ``core.quant``)."""
     assert cfg.layer_kind == "attn", "paged KV cache needs attn layers"
     dtype = _dtype(cfg)
-    one = {"attn": L.paged_cache_init(cfg, n_pages, page_size, dtype)}
+    one = {"attn": L.paged_cache_init(cfg, n_pages, page_size, dtype,
+                                      kv_dtype=kv_dtype)}
     return {"layers": _bcast(one, (cfg.n_layers,))}
 
 
 def cow_copy_pages(pool: dict, src: jax.Array, dst: jax.Array) -> dict:
     """Device half of a copy-on-write fork: copy whole pages ``src[i]`` ->
     ``dst[i]`` in every layer's k/v page arrays ((L, P, page, KV, hd) —
-    the page axis is axis 1).
+    the page axis is axis 1).  A quantized pool's per-(page, head) scale
+    buffers ((L, P, KV) — same page axis) ride the same tree_map, so a COW
+    fork copies page bytes and scales together and stays exact: the fork
+    dequantizes to the very values the source held.
 
     Whole-page copies are sufficient even when only the first ``n`` rows of
     the source are logically shared: rows past the fork point are the source

@@ -85,6 +85,15 @@ The span-aware Pallas paged-gather attention kernel lives in
 ``kernels/paged.py`` (oracles: ``kernels/ref.py::paged_attention_span_ref``
 / ``paged_attention_ref``); enable it with
 ``ContinuousBatchingEngine(..., use_paged_kernel=True)``.
+
+KV pages are stored at the engine's ``kv_dtype`` ("fp32" | "bf16" |
+"int8"; None = model dtype).  int8 pools quantize fresh spans on device
+before the page write — one fp32 scale per (page, kv_head), K and V
+independent (``core.quant``) — dequantize in-kernel on read, copy scales
+with their pages on COW forks, and under a fixed ``pool_bytes`` budget
+hold ~4x the fp32 page count: the capacity that turns PR 4's page sharing
+into fewer preemptions.  ``PoolStats`` reports the physical bytes; both
+cost models price the KV stream at the stored width.
 """
 
 from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401

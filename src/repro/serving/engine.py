@@ -29,6 +29,13 @@ under token/page/latency budgets priced by the cost model.
     provably confined to exclusively-owned pages: host-side by
     ``pool.assert_writable`` on every span, device-side by a write-mask
     derived from the fork point (``write_start``);
+  * KV pages are stored at the engine's ``kv_dtype`` ("fp32" | "bf16" |
+    "int8"; None inherits the model dtype): int8 pools quantize fresh K/V
+    spans on device before the page write (one fp32 scale per
+    (page, head), K and V independent — ``core.quant``), dequantize
+    in-kernel on read, and — sized by ``pool_bytes`` — hold ~4x the fp32
+    page count under the same byte budget, so the same workload preempts
+    less and shares deeper;
   * sampling, token feedback and the page-table gather happen on device;
     only rows whose span reaches the end of their known tokens sample.
     Sampled tokens are harvested with a one-step lag: step N+1 is
@@ -145,13 +152,15 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  page_size: int = 16, max_len: int = 512,
                  n_pages: Optional[int] = None,
+                 pool_bytes: Optional[int] = None,
                  chunk_size: Optional[int] = None,
                  scheduler_cfg: Optional[SchedulerConfig] = None,
                  cost_model: Optional[CostModel] = None,
                  use_paged_kernel: bool = False,
                  quantize: Optional[str] = None,
                  fuse_projections: bool = False,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 kv_dtype: Optional[str] = None):
         if cfg.layer_kind != "attn":
             raise ValueError(
                 "continuous batching needs an attn stack; SSM/hybrid models "
@@ -185,11 +194,37 @@ class ContinuousBatchingEngine:
         self.page_size = page_size
         self.max_len = max_len
         self.max_pages_per_seq = math.ceil(max_len / page_size)
-        if n_pages is None:  # worst case: every slot at max_len, plus sink
-            n_pages = 1 + max_slots * self.max_pages_per_seq
+        # KV page width: None inherits the model dtype (legacy behavior);
+        # "int8" serves quantized pages end to end — per-(page, head) fp32
+        # scales on device, in-kernel dequant on read, and ~4x the page
+        # count under the same byte budget
+        from repro.core.quant import KV_DTYPE_BYTES, kv_page_bytes
+
+        if kv_dtype is not None and kv_dtype not in KV_DTYPE_BYTES:
+            raise ValueError(
+                f"kv_dtype must be one of {sorted(KV_DTYPE_BYTES)} or None, "
+                f"got {kv_dtype!r}")
+        self.kv_dtype = kv_dtype or (
+            "bf16" if cfg.dtype == "bfloat16" else "fp32")
+        page_bytes = kv_page_bytes(cfg.n_layers, cfg.n_kv_heads, cfg.hd,
+                                   page_size, self.kv_dtype)
+        if n_pages is not None and pool_bytes is not None:
+            raise ValueError(
+                "pass n_pages (a page count) OR pool_bytes (a byte budget "
+                "the kv_dtype converts into pages), not both")
+        if n_pages is None:
+            if pool_bytes is not None:
+                # fixed byte budget -> dtype-aware page count: the knob the
+                # kv_quant benchmark sweeps (int8 ~4x the fp32 pages)
+                n_pages = 1 + max(1, pool_bytes // page_bytes)
+            else:  # worst case: every slot at max_len, plus sink
+                n_pages = 1 + max_slots * self.max_pages_per_seq
         self.pool_host = PagedKVPool(n_pages, page_size,
-                                     self.max_pages_per_seq)
-        self.pool = T.init_paged_pool(cfg, n_pages, page_size)
+                                     self.max_pages_per_seq,
+                                     kv_dtype=self.kv_dtype,
+                                     page_bytes=page_bytes)
+        self.pool = T.init_paged_pool(cfg, n_pages, page_size,
+                                      kv_dtype=kv_dtype)
         self.prefix_sharing = prefix_sharing
         sc = scheduler_cfg or SchedulerConfig()
         sc = dataclasses.replace(sc, max_slots=max_slots,

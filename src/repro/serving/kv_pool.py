@@ -9,6 +9,15 @@ and is owned by the engine).  Memory is reserved per sequence in page
 granules, so short and long sequences coexist without padding every slot to
 ``max_len``.
 
+The pool is dtype-aware for *accounting*: the engine's ``kv_dtype`` flag
+("fp32" | "bf16" | "int8") decides how many bytes each page physically pins
+(int8 pages carry per-(page, head) fp32 scales on the device side), and a
+byte-budgeted engine converts the budget into a page count — an int8 pool
+gets ~4x the pages of an equal-budget fp32 pool, which is exactly the
+headroom that turns prefix sharing into capacity (fewer preemptions at the
+same byte budget).  Allocation itself stays page-granular and
+width-oblivious; ``PoolStats`` reports the physical bytes.
+
 Ownership contract (the refactor away from exclusive free-list ownership):
 
   * every live page carries a *sequence refcount* — the number of page
@@ -73,7 +82,15 @@ class PoolStats:
     unique_pages: int      # distinct pages held by >= 1 sequence
     cached_pages: int      # trie-cached pages no sequence holds (reclaimable)
     prefix_hit_tokens: int    # cumulative tokens served from the trie
-    prefix_hit_rate: float    # hit tokens / tokens looked up
+    prefix_hit_rate: float    # hit tokens / tokens looked up (0.0 before
+                              # any request has been admitted)
+    # dtype-aware physical accounting: what the pages actually weigh, so a
+    # byte-budgeted deployment can compare fp32/bf16/int8 pools directly
+    kv_dtype: str = "fp32"    # stored page width ("fp32" | "bf16" | "int8")
+    page_bytes: int = 0       # physical bytes per page (k+v rows across the
+                              # stack, plus int8 per-(page, head) scales)
+    pool_bytes: int = 0       # page_bytes * usable pages (sink excluded)
+    allocated_bytes: int = 0  # page_bytes * allocated_pages
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,12 +158,18 @@ class PagedKVPool:
     """Refcounted page allocator with prefix-trie sharing and COW forks."""
 
     def __init__(self, n_pages: int, page_size: int,
-                 max_pages_per_seq: Optional[int] = None):
+                 max_pages_per_seq: Optional[int] = None,
+                 kv_dtype: str = "fp32", page_bytes: int = 0):
         if n_pages < 2:
             raise ValueError("need at least one usable page beyond the sink")
         self.n_pages = n_pages
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
+        # physical accounting only — allocation is page-granular regardless
+        # of width; the engine sizes n_pages from a byte budget, so an int8
+        # pool simply has ~4x the pages of an equal-budget fp32 pool
+        self.kv_dtype = kv_dtype
+        self.page_bytes = page_bytes
         # LIFO free list keeps recently-freed (cache-warm) pages hot
         self._free: list[int] = list(range(n_pages - 1, SINK_PAGE, -1))
         self._tables: dict[int, list[int]] = {}   # seq_id -> page ids
@@ -210,18 +233,27 @@ class PagedKVPool:
         cached_only = sum(1 for p in self._cached if p not in counts)
         capacity = sum(len(t) for t in self._tables.values()) * self.page_size
         live = sum(self._lengths.values())
+        # guard BOTH counters: before any admission (or with sharing off)
+        # nothing has been looked up, and the rate must read 0.0 — not raise
+        # and not NaN from a 0/0
         lk = self.prefix_lookup_tokens
+        rate = self.prefix_hit_tokens / lk if lk > 0 else 0.0
+        allocated = unique + cached_only
         return PoolStats(
             n_pages=self.n_pages - 1,
             free_pages=self.free_pages,
-            allocated_pages=unique + cached_only,
+            allocated_pages=allocated,
             n_seqs=len(self._tables),
             utilization=live / capacity if capacity else 1.0,
             shared_pages=shared,
             unique_pages=unique,
             cached_pages=cached_only,
             prefix_hit_tokens=self.prefix_hit_tokens,
-            prefix_hit_rate=self.prefix_hit_tokens / lk if lk else 0.0,
+            prefix_hit_rate=rate,
+            kv_dtype=self.kv_dtype,
+            page_bytes=self.page_bytes,
+            pool_bytes=self.page_bytes * (self.n_pages - 1),
+            allocated_bytes=self.page_bytes * allocated,
         )
 
     # -- page supply (free list + LRU trie reclaim) ------------------------

@@ -124,8 +124,19 @@ class HBMCostModel:
         return 0.0
 
     @classmethod
-    def from_model_config(cls, cfg, **kw) -> "HBMCostModel":
-        kvb = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2.0
+    def from_model_config(cls, cfg, kv_dtype: str = "bf16",
+                          **kw) -> "HBMCostModel":
+        """``kv_dtype`` prices the KV stream at the serving pool's STORED
+        page width ("fp32" | "bf16" | "int8"): decoding against an int8
+        pool gathers a quarter of the fp32 bytes per context token, so the
+        roofline admits wider batches / longer contexts before the KV term
+        dominates the weight pass.  Default bf16 preserves the historical
+        2 bytes/KV-element pricing."""
+        from repro.cim.workload import decode_kv_bytes_per_token
+        from repro.core.quant import KV_DTYPE_BYTES
+
+        kvb = decode_kv_bytes_per_token(
+            cfg, kv_bits=int(8 * KV_DTYPE_BYTES[kv_dtype]))
         return cls(n_params=cfg.active_param_count(),
                    kv_bytes_per_token=kvb, **kw)
 
@@ -135,7 +146,9 @@ class HBMCostModel:
         quantized (int8 / packed-int4) decode path admits wider batches: the
         per-step weight read is the compressed footprint, not 4 bytes/param.
         ``bytes_per_param`` = total tree bytes / modeled param count (scales
-        and fp32 residue like norms/embedding keep it honest)."""
+        and fp32 residue like norms/embedding keep it honest).  Forward
+        ``kv_dtype=`` to additionally price the KV stream at the pool's
+        stored page width."""
         from repro.core.quant import tree_weight_bytes
 
         bpp = tree_weight_bytes(params) / max(cfg.param_count(), 1)
@@ -155,12 +168,13 @@ class CIMCostModel:
     def __init__(self, model_cfg, strategy: str = "sparse",
                  cim_cfg=None, seq_len: int = 512,
                  attn_dpu_ns_per_key: float = 0.05,
-                 weight_bits: int = 8, fused_proj: bool = False):
+                 weight_bits: int = 8, fused_proj: bool = False,
+                 kv_bits: int = 32):
         import dataclasses as _dc
 
         from repro.cim.simulator import simulate
         from repro.cim.spec import CIMConfig
-        from repro.cim.workload import decode_workload
+        from repro.cim.workload import decode_kv_bytes_per_token, decode_workload
 
         self.strategy = strategy
         cfg = cim_cfg or CIMConfig()
@@ -174,7 +188,14 @@ class CIMCostModel:
         r = simulate(desc, strategy, self._cfg)
         self.per_token_ns = r.latency_ns_per_token
         self.per_token_nj = r.energy_nj_per_token
-        self.attn_dpu_ns_per_key = attn_dpu_ns_per_key
+        # the DPU runs the non-parameterized attention matmuls off-array: its
+        # per-key time tracks the bytes it streams from the paged KV pool,
+        # so an int8 pool (kv_bits=8) clocks a quarter of the fp32 movement
+        # (decode_kv_bytes_per_token is the shared pricing convention)
+        self.kv_bits = kv_bits
+        width_ratio = (decode_kv_bytes_per_token(model_cfg, kv_bits)
+                       / decode_kv_bytes_per_token(model_cfg, 32))
+        self.attn_dpu_ns_per_key = attn_dpu_ns_per_key * width_ratio
 
     def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
         attn = self.attn_dpu_ns_per_key * avg_ctx
