@@ -32,7 +32,9 @@ Emits BENCH_decode.json:
     "cpu_tok_s": ..., "roofline_tok_s": ..., "ms_per_step": ...,
     "weight_bytes_per_token": ...}, ...],
    "headline": {"cpu_speedup": ..., "roofline_speedup": ...,
-                "byte_reduction": ..., ...}}     # at batch 8
+                "byte_reduction": ..., ...},     # at batch 8
+   "telemetry": {"separate": {"n": ..., "scale": ..., ...},  # roofline
+                 "fused": {...}}}                # calibration per mode
 
 Run:  PYTHONPATH=src python benchmarks/decode_path.py
 """
@@ -54,6 +56,7 @@ from repro.models import decode_path as DP
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.metrics import Calibration
 from repro.serving.scheduler import HBMCostModel
 
 # Paper-scale projection widths (BERT/GPT2-medium d_model), small vocab so
@@ -174,7 +177,27 @@ def run_sweep(batches=(1, 8, 32), steps: int = 24, repeats: int = 5) -> dict:
     return {"bench": "decode_path", "config": {
         "d_model": CFG.d_model, "n_layers": CFG.n_layers,
         "steps": steps, "repeats": repeats}, "results": results,
-        "headline": _headline(results)}
+        "headline": _headline(results),
+        "telemetry": _telemetry(results)}
+
+
+def _telemetry(results: list[dict]) -> dict:
+    """Roofline calibration: the memory-bound predicted step time vs the
+    measured CPU step time, per variant group.  On this compute-bound
+    container the scale factor is far above 1 by design (the roofline
+    prices bytes, the CPU pays FLOPs) — what the residual spread shows is
+    whether the model still RANKS the variants correctly, which is all the
+    serving scheduler needs from it."""
+    out = {}
+    for mode in ("separate", "fused"):
+        cal = Calibration(f"decode_roofline_{mode}")
+        for r in results:
+            if r["mode"] != mode:
+                continue
+            pred_ns = r["batch"] / r["roofline_tok_s"] * 1e9
+            cal.record(pred_ns, r["ms_per_step"] * 1e6)
+        out[mode] = cal.report()
+    return out
 
 
 def _headline(results: list[dict], batch: int = 8) -> dict:

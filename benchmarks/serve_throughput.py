@@ -37,6 +37,17 @@ fp32, asserted) while greedy outputs stay >= 95% token-identical to the
 fp32-KV run (asserted).  Also reports the page-capacity ratio (>= 2x for
 int8, asserted — the acceptance criterion).
 
+Part 5 (telemetry): cost-model calibration + request-latency telemetry.
+Per cost model, one fully-instrumented run (metrics + Chrome tracing on,
+per-step device sync) pairs each step's predicted ``sim_latency_ns`` with
+measured wall time: the fitted scale factor and residual distribution say
+how trustworthy the scheduler's pricing is, and the registry's TTFT /
+inter-token / queue-wait histograms land in the JSON alongside it.  The
+emitted trace is schema-validated (``validate_trace``) with per-iteration
+span coverage asserted; ``--trace-out PATH`` saves it for Perfetto.  Also
+measures the throughput overhead of leaving telemetry on (best-of-3 vs
+``metrics=False``).
+
 Cost models are constructed ONCE per (name, config) via ``_cost_model`` and
 reused across every sweep cell and warm-up pass — a ``CIMCostModel`` runs
 the paper's simulator at construction, so rebuilding it per cell was pure
@@ -54,6 +65,12 @@ Emits BENCH_serving.json:
                "page_reduction": ..., "prefill_reduction": ..., ...}, ...],
    "kv_quant": [{"kv_dtype": "int8", "pool_bytes": ..., "n_pages": ...,
                  "preemptions": ..., "agreement_vs_fp32": ..., ...}, ...],
+   "telemetry": {"calibration": {"hbm": {"n": ..., "scale": ...,
+                                         "residual_p50": ..., ...},
+                                 "cim": {...}},
+                 "request_latency": {"hbm": {"ttft_ms": {...}, ...}, ...},
+                 "trace": {"path": ..., "events": ..., "spans": {...}},
+                 "overhead": {"telemetry_on_tok_s": ..., ...}},
    "outputs_match": true}
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
@@ -63,6 +80,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -425,12 +443,132 @@ def run_kv_quant_sweep(params, *, kv_dtypes, prompt_len, new_tokens,
     return rows
 
 
+def run_telemetry(params, *, cost_models, prompt_len, new_tokens,
+                  n_requests, max_slots, chunk=8, trace_out=None):
+    """Part 5: cost-model calibration + request-latency telemetry.
+
+    Runs the same request set once per cost model with full metrics and
+    tracing on; every step pays a device sync so the wall time the
+    engine's ``Calibration`` pairs with the predicted ``sim_latency_ns``
+    is real (a warm pass per config keeps jit compiles out of the pairs).
+    Reports the fitted scale + residual distribution per cost model, the
+    TTFT / inter-token / queue-wait / end-to-end histograms, the validated
+    Chrome trace (every iteration must open step+plan spans; every
+    dispatched step a dispatch span, later exactly one harvest span), and
+    the throughput overhead of leaving telemetry on (best-of-3, vs
+    ``metrics=False`` with tracing off)."""
+    from repro.serving import validate_trace
+
+    max_len = prompt_len + new_tokens + 8
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(700 + i), (prompt_len,), 0, CFG.vocab))
+        for i in range(n_requests)]
+
+    def run_engine(cost, metrics, trace, sync):
+        eng = ContinuousBatchingEngine(
+            CFG, params, max_slots=max_slots, page_size=8, max_len=max_len,
+            chunk_size=chunk, cost_model=cost, metrics=metrics, trace=trace)
+        for i, p in enumerate(prompts):
+            eng.add_request(p, SamplingParams(max_new_tokens=new_tokens,
+                                              seed=i))
+        t0 = time.perf_counter()
+        if sync:   # honest per-step wall time for the calibration pairs
+            while eng.has_work():
+                eng.step()
+                jax.block_until_ready(eng._tok)
+        else:      # pipelined, as the throughput pass runs
+            eng.run()
+        wall = time.perf_counter() - t0
+        eng.pool_host.check_invariants()
+        return eng, wall
+
+    out = {"calibration": {}, "request_latency": {}}
+    last_tracer = None
+    for cm_name in cost_models:
+        cost = _cost_model(cm_name, seq_len=prompt_len)
+        run_engine(cost, metrics=False, trace=None, sync=True)   # jit warm
+        eng, _ = run_engine(cost, metrics=True, trace=True, sync=True)
+        rep = eng.calibration.report()
+        out["calibration"][cm_name] = rep
+        hists = eng.registry.snapshot()["histograms"]
+        out["request_latency"][cm_name] = {
+            "ttft_ms": hists["request.ttft_ms"],
+            "itl_ms": hists["request.itl_ms"],
+            "queue_wait_ms": hists["request.queue_wait_ms"],
+            "e2e_ms": hists["request.e2e_ms"],
+        }
+        n_events = validate_trace(eng.tracer.to_json())
+        counts = eng.tracer.span_counts()
+        # span coverage: every iteration opens step+plan spans (replans can
+        # only add plan spans); every dispatched step is traced and later
+        # harvested exactly once
+        assert counts.get("step", 0) == eng.step_idx, counts
+        assert counts.get("plan", 0) >= eng.step_idx, counts
+        assert counts.get("dispatch", 0) == eng.stats["mixed_steps"], counts
+        assert counts.get("harvest", 0) == eng.stats["mixed_steps"], counts
+        last_tracer = (eng.tracer, n_events, counts)
+        print(f"  [{cm_name}] calibration: n={rep['n']} "
+              f"scale={rep['scale']:.3g} residual p50="
+              f"{rep['residual_p50']:.2f} p90={rep['residual_p90']:.2f}  "
+              f"ttft p50={hists['request.ttft_ms']['p50']:.1f}ms "
+              f"itl p50={hists['request.itl_ms']['p50']:.2f}ms  "
+              f"trace events={n_events}")
+    if trace_out and last_tracer is not None:
+        tracer, n_events, counts = last_tracer
+        tracer.save(trace_out)
+        out["trace"] = {"path": trace_out, "events": n_events,
+                        "spans": counts}
+        print(f"  wrote {trace_out} ({n_events} events)")
+
+    # overhead of leaving telemetry on: batch-8, pipelined like the
+    # throughput pass — the acceptance criterion's configuration (per-step
+    # telemetry work is fixed-cost, so small batches overstate it)
+    cost = _cost_model(cost_models[0], seq_len=prompt_len)
+    ov_slots = max(max_slots, 8)
+    ov_prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(800 + i), (prompt_len,), 0, CFG.vocab))
+        for i in range(ov_slots)]
+
+    def best_tok_s(metrics, trace, reps=5):
+        best = 0.0
+        for _ in range(reps):
+            eng = ContinuousBatchingEngine(
+                CFG, params, max_slots=ov_slots, page_size=8,
+                max_len=max_len, chunk_size=chunk, cost_model=cost,
+                metrics=metrics, trace=trace)
+            for i, p in enumerate(ov_prompts):
+                eng.add_request(p, SamplingParams(
+                    max_new_tokens=new_tokens, seed=i))
+            t0 = time.perf_counter()
+            eng.run()
+            wall = time.perf_counter() - t0
+            eng.pool_host.check_invariants()
+            best = max(best, eng.stats["tokens_out"] / wall)
+        return best
+
+    best_tok_s(False, None, reps=1)   # warm this batch shape's span buckets
+    on = best_tok_s(True, True)
+    off = best_tok_s(False, None)
+    out["overhead"] = {
+        "concurrency": ov_slots,
+        "telemetry_on_tok_s": on, "telemetry_off_tok_s": off,
+        "overhead_pct": max(0.0, (off - on) / off * 100.0) if off else 0.0,
+    }
+    print(f"  telemetry overhead: {off:.1f} -> {on:.1f} tok/s "
+          f"({out['overhead']['overhead_pct']:.1f}% at "
+          f"concurrency {ov_slots})")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: tiny sweep, 2 chunk sizes")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also save the telemetry pass's Chrome trace JSON "
+                         "(loadable at ui.perfetto.dev)")
     args = ap.parse_args()
 
     params = T.init_params(jax.random.PRNGKey(0), CFG)
@@ -453,6 +591,11 @@ def main():
         kv_quant = run_kv_quant_sweep(
             params, kv_dtypes=("fp32", "int8"), prompt_len=24,
             new_tokens=new_tokens, n_requests=4, max_slots=2, chunk=8)
+        print("telemetry (smoke):")
+        telemetry = run_telemetry(
+            params, cost_models=("hbm", "cim"), prompt_len=24,
+            new_tokens=new_tokens, n_requests=4, max_slots=2, chunk=8,
+            trace_out=args.trace_out)
     else:
         results, m1 = run_throughput(params, (1, 2, 4, 8), prompt_len=16,
                                      new_tokens=args.new_tokens)
@@ -469,10 +612,16 @@ def main():
         kv_quant = run_kv_quant_sweep(
             params, kv_dtypes=("fp32", "bf16", "int8"), prompt_len=48,
             new_tokens=args.new_tokens, n_requests=6, max_slots=4)
+        print("telemetry:")
+        telemetry = run_telemetry(
+            params, cost_models=("hbm", "cim"), prompt_len=48,
+            new_tokens=args.new_tokens, n_requests=8, max_slots=8, chunk=16,
+            trace_out=args.trace_out)
     all_match = m1 and m2 and m3
     payload = {"bench": "serving_throughput", "smoke": args.smoke,
                "results": results, "chunked": chunked, "prefix": prefix,
-               "kv_quant": kv_quant, "outputs_match": all_match}
+               "kv_quant": kv_quant, "telemetry": telemetry,
+               "outputs_match": all_match}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
@@ -509,6 +658,16 @@ def main():
           f"({int8['n_pages'] / fp32['n_pages']:.1f}x capacity), "
           f"preemptions {fp32['preemptions']} -> {int8['preemptions']}, "
           f"greedy agreement {int8['agreement_vs_fp32']:.1%}")
+    # acceptance (telemetry): a calibration factor exists for BOTH cost
+    # models with finite residuals, and the TTFT histogram saw every request
+    for cm_name in ("hbm", "cim"):
+        rep = telemetry["calibration"][cm_name]
+        assert rep["n"] > 0, (cm_name, rep)
+        for k in ("scale", "residual_p50", "residual_p90", "residual_max"):
+            assert math.isfinite(rep[k]), (cm_name, k, rep)
+        rl = telemetry["request_latency"][cm_name]
+        assert rl["ttft_ms"]["count"] > 0, (cm_name, rl)
+        assert rl["itl_ms"]["count"] > 0, (cm_name, rl)
     at8 = [r for r in results if r["concurrency"] == 8]
     if at8:
         print(f"speedup at 8 concurrent: {at8[0]['speedup']:.2f}x")

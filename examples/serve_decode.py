@@ -15,7 +15,12 @@ recomputing (and re-storing) the shared prefix — the exit report prints
 pages saved and prefill tokens skipped.  ``--no-prefix-sharing`` turns the
 trie off for comparison.  ``--kv-dtype int8`` serves quantized KV pages
 (per-(page, head) fp32 scales, in-kernel dequant) — the exit report prints
-the pool's physical bytes, a quarter of fp32 per page.
+the pool's physical bytes, a quarter of fp32 per page.  ``--metrics``
+prints the full telemetry exit report (TTFT / inter-token / queue-wait
+histograms, pool gauges, the cost-model calibration fit);
+``--trace-out PATH`` saves a Chrome trace of every engine iteration's
+plan / admit / dispatch / sync / harvest spans, loadable at
+https://ui.perfetto.dev.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--arch mamba2-2_7b]
       (SSM/hybrid archs fall back to the legacy single-batch engine)
@@ -65,6 +70,12 @@ def main():
                     default=None,
                     help="stored KV page width (int8: quantized pages with "
                          "per-(page, head) scales; default: model dtype)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry exit report (request latency "
+                         "histograms, pool gauges, calibration fit)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="save a Chrome trace of the engine's iterations "
+                         "(loadable at ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -118,7 +129,8 @@ def main():
         use_paged_kernel=args.paged_kernel,
         quantize=args.quantize, fuse_projections=args.fuse,
         prefix_sharing=not args.no_prefix_sharing,
-        kv_dtype=args.kv_dtype)
+        kv_dtype=args.kv_dtype,
+        trace=args.trace_out)
     if args.cost_model == "hbm":
         # price weight traffic by the tree the engine actually serves
         # (post fuse/quantize) and the KV stream by the stored page width,
@@ -177,6 +189,11 @@ def main():
     print(f"pool bytes ({ps.kv_dtype} pages, {ps.page_bytes} B/page): "
           f"{ps.allocated_bytes / 1e3:.1f} of {ps.pool_bytes / 1e3:.1f} kB "
           f"physically pinned")
+    # high-water mark: exit-time occupancy hides the mid-run peak — this is
+    # what a capacity planner sizes the pool against
+    print(f"pool high-water: {ps.peak_pages}/{ps.n_pages} pages "
+          f"({ps.peak_bytes / 1e3:.1f} kB) at peak, "
+          f"{ps.cache_evictions} LRU cache evictions")
     if args.system_prompt and not args.no_prefix_sharing:
         pool = engine.pool_host
         naive = sum(pool.pages_for(r.total_len) for r in finished)
@@ -189,6 +206,21 @@ def main():
         print(f"simulated decode cost ({args.cost_model} model): "
               f"{s['sim_latency_ns']/1e3:.1f} us, "
               f"{s['sim_energy_nj']/1e3:.1f} uJ")
+    if args.metrics:
+        from repro.serving import render_report
+
+        print()
+        print(render_report(engine.registry, [engine.calibration]))
+        lat = [(r.req_id, r.ttft, r.queue_wait) for r in finished]
+        print("per-request (ttft / queue wait, ms):")
+        for rid, ttft, qw in sorted(lat):
+            print(f"  req{rid}: {ttft * 1e3:7.2f} / {qw * 1e3:7.2f}")
+    if args.trace_out:
+        from repro.serving import validate_trace
+
+        n_ev = validate_trace(engine.tracer.to_json())
+        print(f"wrote {engine.tracer.save()} ({n_ev} trace events — open "
+              f"at https://ui.perfetto.dev)")
     engine.pool_host.check_invariants()
     print("serve OK")
 

@@ -51,19 +51,42 @@ shares pages across sequences:
     nor the trie holds it.  Cached-only pages are reclaimed LRU (leaves
     first) when allocation needs them.
 
+Telemetry:  the engine is observable end to end, with zero dependencies.
+``engine.stats`` is a typed ``EngineStats`` view over a per-engine
+``MetricsRegistry`` (counters / gauges / fixed-bucket histograms with
+Prometheus-style percentile estimation; ``registry.snapshot()`` is a
+JSON-ready nested dict).  Every ``Request`` carries wall-clock lifecycle
+stamps (arrival -> admitted -> first token -> finished, plus an
+append-only event log recording preemptions and resumes) from which TTFT,
+inter-token latency, queue wait and end-to-end latency histograms are
+derived — token stamps are taken at device-sync HARVEST time, never at
+dispatch, because the engine's one-step harvest lag would otherwise
+antedate them.  ``ContinuousBatchingEngine(..., trace="out.json")``
+brackets each iteration's phases (plan / admit / dispatch / sync /
+harvest) with Chrome trace-event spans — ``engine.tracer.save()`` writes
+Perfetto-loadable JSON — and a ``Calibration`` pairs each step's
+cost-model prediction (``sim_latency_ns``) with measured wall time,
+fitting the scale factor ``benchmarks/serve_throughput.py`` publishes in
+``BENCH_serving.json``'s ``telemetry`` section.  ``metrics=False`` keeps
+only the raw counters; with tracing off every span hook is a shared no-op
+singleton.
+
 Module map:
   request.py   — ``Request``/``Sequence`` lifecycle, the
                  ``num_computed_tokens`` cursor (starts at the matched
                  prefix length), ``num_cached_tokens``, per-request
-                 ``SamplingParams``, streaming ``on_token`` callbacks.
+                 ``SamplingParams``, streaming ``on_token`` callbacks,
+                 wall-clock lifecycle timestamps (``ttft`` /
+                 ``queue_wait`` / ``e2e_latency``).
   kv_pool.py   — ``PagedKVPool``: refcounted pages, per-sequence page
                  tables, the radix/prefix trie over token IDs
                  (``match_prefix`` / ``acquire_prefix`` /
                  ``commit_prefix``), COW forks, LRU reclaim, write
                  confinement, and sharing-aware ``PoolStats``
-                 (shared/unique/cached pages, prefix hit tokens + rate).
-                 Host-side twin of the device pool in
-                 ``models.transformer.init_paged_pool``.
+                 (shared/unique/cached pages, prefix hit tokens + rate,
+                 high-water ``peak_pages``/``peak_bytes``, LRU
+                 ``cache_evictions``).  Host-side twin of the device pool
+                 in ``models.transformer.init_paged_pool``.
   scheduler.py — ``IterationScheduler.plan_step``: packs prefill chunks
                  around the in-flight decodes each step under
                  slot/page/token/latency budgets; admission budgets count
@@ -80,6 +103,12 @@ Module map:
                  preemption/resume machinery; ``prefix_sharing=False``
                  restores exclusive ownership.  Plus the legacy
                  ``ServeEngine`` compat shim.
+  metrics.py   — dependency-free ``MetricsRegistry`` (Counter / Gauge /
+                 Histogram), the dict-compatible ``EngineStats``, and
+                 ``Calibration`` (predicted-vs-measured cost-model fit).
+  tracing.py   — ``ChromeTracer`` Chrome trace-event spans (Perfetto),
+                 the no-op ``NULL_TRACER``, and ``validate_trace`` (the
+                 machine-checkable "loads in Perfetto").
 
 The span-aware Pallas paged-gather attention kernel lives in
 ``kernels/paged.py`` (oracles: ``kernels/ref.py::paged_attention_span_ref``
@@ -100,8 +129,13 @@ from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
                                   GenerationConfig, ServeEngine)
 from repro.serving.kv_pool import (PagedKVPool, PoolOOM,  # noqa: F401
                                    PoolStats, PrefixMatch)
+from repro.serving.metrics import (Calibration, Counter,  # noqa: F401
+                                   EngineStats, Gauge, Histogram,
+                                   MetricsRegistry, render_report)
 from repro.serving.request import (FinishReason, Request,  # noqa: F401
                                    RequestState, SamplingParams, Sequence)
 from repro.serving.scheduler import (CIMCostModel, CostModel,  # noqa: F401
                                      HBMCostModel, IterationScheduler,
                                      SchedulerConfig, StepPlan)
+from repro.serving.tracing import (NULL_TRACER, ChromeTracer,  # noqa: F401
+                                   NullTracer, load_trace, validate_trace)

@@ -40,7 +40,18 @@ under token/page/latency budgets priced by the cost model.
     only rows whose span reaches the end of their known tokens sample.
     Sampled tokens are harvested with a one-step lag: step N+1 is
     dispatched before step N's results are read back, keeping transfers
-    off the critical path (the host never blocks the dispatch chain).
+    off the critical path (the host never blocks the dispatch chain);
+  * the engine is *observable*: ``stats`` is a typed ``EngineStats`` view
+    over a ``MetricsRegistry`` (dict-compatible — existing call sites keep
+    working), per-request lifecycle timestamps land on the ``Request``
+    (token stamps at device-sync harvest time, never dispatch time — the
+    lagged harvest would otherwise antedate them), per-iteration gauges
+    track batch composition and pool pressure, ``trace=`` brackets the
+    engine phases (plan / admit / dispatch / sync / harvest) with Chrome
+    trace-event spans loadable in Perfetto, and a ``Calibration`` pairs
+    each step's cost-model prediction with measured wall time.
+    ``metrics=False`` keeps only the raw counters; with tracing off the
+    span hooks are no-op singletons — near-zero overhead by construction.
 """
 
 from __future__ import annotations
@@ -50,7 +61,9 @@ import dataclasses
 import functools
 import itertools
 import math
-from typing import Optional
+import os
+import time
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -59,10 +72,14 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.kv_pool import PagedKVPool, PoolOOM, SINK_PAGE
+from repro.serving.metrics import (Calibration, EngineStats,
+                                   LATENCY_MS_BUCKETS, MetricsRegistry,
+                                   TOKEN_BUCKETS)
 from repro.serving.request import (FinishReason, Request, RequestState,
                                    SamplingParams, Sequence)
 from repro.serving.scheduler import (CostModel, IterationScheduler,
                                      SchedulerConfig, StepPlan)
+from repro.serving.tracing import NULL_TRACER, ChromeTracer
 
 
 @dataclasses.dataclass
@@ -160,7 +177,9 @@ class ContinuousBatchingEngine:
                  quantize: Optional[str] = None,
                  fuse_projections: bool = False,
                  prefix_sharing: bool = True,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 metrics: bool = True,
+                 trace: Union[bool, str, os.PathLike, None] = None):
         if cfg.layer_kind != "attn":
             raise ValueError(
                 "continuous batching needs an attn stack; SSM/hybrid models "
@@ -248,10 +267,46 @@ class ContinuousBatchingEngine:
         self._admit_stamp = itertools.count()           # priority order
         self._pending: list[dict] = []                  # un-harvested steps
         self.step_idx = 0
-        self.stats = {"mixed_steps": 0, "decode_tokens": 0,
-                      "prefill_tokens": 0, "tokens_out": 0, "preemptions": 0,
-                      "prefix_hit_tokens": 0, "cow_forks": 0,
-                      "sim_latency_ns": 0.0, "sim_energy_nj": 0.0}
+
+        # -- observability: registry-backed stats, spans, calibration ------
+        # The registry (and the EngineStats counters over it) always exists
+        # — engine internals and every existing test/benchmark read
+        # ``stats`` — while ``metrics=False`` turns off the EXTRA per-step
+        # work: lifecycle histograms, pool gauges, the dispatch log and the
+        # step calibration.  ``trace`` is off by default; a truthy value
+        # collects Chrome trace events (a str/PathLike doubles as the
+        # default ``tracer.save()`` path).
+        self.registry = MetricsRegistry()
+        self.stats = EngineStats(self.registry)
+        self.metrics_enabled = bool(metrics)
+        if trace:
+            path = trace if isinstance(trace, (str, os.PathLike)) else None
+            self.tracer = ChromeTracer(path=path)
+        else:
+            self.tracer = NULL_TRACER
+        self.calibration = Calibration(
+            "engine_step", self.registry if self.metrics_enabled else None)
+        # (step_idx, req_id, kind, n_tokens) per executed span — the audit
+        # log tests reconcile against the decode/prefill token counters
+        self.dispatch_log: list[tuple[int, int, str, int]] = []
+        if self.metrics_enabled:
+            h, g = self.registry.histogram, self.registry.gauge
+            self._h_ttft = h("request.ttft_ms", LATENCY_MS_BUCKETS)
+            self._h_itl = h("request.itl_ms", LATENCY_MS_BUCKETS)
+            self._h_queue_wait = h("request.queue_wait_ms",
+                                   LATENCY_MS_BUCKETS)
+            self._h_e2e = h("request.e2e_ms", LATENCY_MS_BUCKETS)
+            self._h_cached = h("request.cached_tokens", TOKEN_BUCKETS)
+            self._h_cow = h("request.cow_pages", (0.0, 1.0, 2.0, 4.0))
+            self._h_batch = h("step.batch_size",
+                              (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0))
+            self._h_chunk = h("step.prefill_tokens", TOKEN_BUCKETS)
+            self._g_queue = g("sched.queue_depth")
+            self._g_free = g("pool.free_pages")
+            self._g_shared = g("pool.shared_pages")
+            self._g_cached = g("pool.cached_pages")
+            self._g_held = g("pool.held_pages")
+            self._g_evict = g("pool.cache_evictions")
         self._mixed = functools.partial(_mixed_step_jit, cfg=self.cfg)
 
     # -- request intake ----------------------------------------------------
@@ -281,7 +336,10 @@ class ContinuousBatchingEngine:
             req.num_cached_tokens = self.pool_host.match_prefix(
                 req.known_tokens).n_tokens
         req.arrived_step = self.step_idx
+        req.t_arrival = req.t_enqueued = req.mark("arrived")
         self.waiting.append(req)
+        if self.metrics_enabled:
+            self._g_queue.set(len(self.waiting))
         return req
 
     def has_work(self) -> bool:
@@ -294,6 +352,21 @@ class ContinuousBatchingEngine:
         chunks), harvest the previous one, evict finished sequences.
         Returns requests finished this call."""
         self.step_idx += 1
+        t0 = time.perf_counter()
+        pred0 = self.stats["sim_latency_ns"]
+        with self.tracer.span("step", step=self.step_idx):
+            finished = self._step_inner()
+        if self.metrics_enabled:
+            # calibrate the cost model: pair this step's predicted ns (what
+            # _dispatch charged to sim_latency_ns) with measured wall time.
+            # Steps that dispatched nothing predict 0 and are skipped.
+            pred = self.stats["sim_latency_ns"] - pred0
+            if pred > 0:
+                self.calibration.record(pred,
+                                        (time.perf_counter() - t0) * 1e9)
+        return finished
+
+    def _step_inner(self) -> list[Request]:
         finished: list[Request] = []
 
         plan = self._plan()
@@ -368,8 +441,10 @@ class ContinuousBatchingEngine:
     # -- internals ---------------------------------------------------------
 
     def _plan(self) -> StepPlan:
-        return self.scheduler.plan_step(
-            list(self.waiting), list(self.running.values()), self.pool_host)
+        with self.tracer.span("plan", step=self.step_idx):
+            return self.scheduler.plan_step(
+                list(self.waiting), list(self.running.values()),
+                self.pool_host)
 
     def _admit(self, admissions: list[tuple[Request, int]]
                ) -> list[tuple[Sequence, int]]:
@@ -382,9 +457,15 @@ class ContinuousBatchingEngine:
         request re-enters with its emitted tokens folded into the prefill
         target (re-matched against the trie, typically a cache hit on the
         pages it committed before eviction) and its saved PRNG stream."""
-        spans: list[tuple[Sequence, int]] = []
         if not admissions:
-            return spans
+            return []
+        with self.tracer.span("admit", step=self.step_idx,
+                              n=len(admissions)):
+            return self._admit_inner(admissions)
+
+    def _admit_inner(self, admissions: list[tuple[Request, int]]
+                     ) -> list[tuple[Sequence, int]]:
+        spans: list[tuple[Sequence, int]] = []
         rows, temps, keys, wstarts = [], [], [], []
         cow_ops: list[tuple[int, int]] = []
         for req, chunk in admissions:
@@ -398,11 +479,13 @@ class ContinuousBatchingEngine:
             # priority order (decodes -> residents -> admissions), so a
             # mid-step drift in what the trie still holds can only shrink
             # the lowest-priority spans, never starve a mandatory decode
+            n_cow = 0
             if self.prefix_sharing:
                 pages, matched, cow = self.pool_host.acquire_prefix(
                     req.req_id, req.known_tokens)
                 chunk = min(chunk, target - matched)
                 cow_ops.extend(cow)
+                n_cow = len(cow)
                 # read through the pool's counters — the pool also counts
                 # adopt-in-place forks, which return no cow op
                 self.stats["prefix_hit_tokens"] = \
@@ -414,10 +497,21 @@ class ContinuousBatchingEngine:
                                                          chunk), 0
             req.num_computed_tokens = matched
             req.num_cached_tokens = matched
+            now = time.perf_counter()
+            if req.t_admitted < 0:
+                req.t_admitted = now
+            req.mark("resumed" if req.num_preemptions else "admitted", now)
+            if self.metrics_enabled:
+                # queue-wait clock: arrival, or the last preemption — the
+                # wait a victim re-pays is real scheduler latency
+                self._h_queue_wait.observe((now - req.t_enqueued) * 1e3)
+                self._h_cached.observe(matched)
+                self._h_cow.observe(n_cow)
             slot = self._free_slots.pop()
             seq = Sequence(request=req, slot=slot, page_ids=pages,
                            prefill_target=target,
-                           admit_order=next(self._admit_stamp))
+                           admit_order=next(self._admit_stamp),
+                           t_admitted=now)
             self.running[slot] = seq
             self._pt_dirty.add(slot)
             spans.append((seq, chunk))
@@ -445,11 +539,18 @@ class ContinuousBatchingEngine:
                 src[i], dst[i] = s, d
             self.pool = _cow_copy_jit(self.pool, jnp.asarray(src),
                                       jnp.asarray(dst))
+        if self.metrics_enabled:
+            self._g_queue.set(len(self.waiting))
         return spans
 
     def _dispatch(self, spans: list[tuple[Sequence, int]]) -> None:
         """Grow page tables to cover every span, build the (slot, span)
         batch, and dispatch the jitted mixed step."""
+        with self.tracer.span("dispatch", step=self.step_idx,
+                              spans=len(spans)):
+            self._dispatch_inner(spans)
+
+    def _dispatch_inner(self, spans: list[tuple[Sequence, int]]) -> None:
         B = self.max_slots
         Sb = _bucket(max(n for _, n in spans))
         self.last_span_bucket = Sb  # instrumentation: which jit variant ran
@@ -459,7 +560,7 @@ class ContinuousBatchingEngine:
         use_dev = np.zeros((B,), bool)
         sample = np.zeros((B,), bool)
         harvest: list[tuple[int, Sequence]] = []
-        n_dec, dec_ctx, prefill_toks = 0, 0, 0
+        n_dec, dec_ctx, prefill_toks, n_rows = 0, 0, 0, 0
 
         for seq, n in spans:
             req = seq.request
@@ -490,6 +591,9 @@ class ContinuousBatchingEngine:
                 n_dec += 1
                 dec_ctx += nc
                 self.stats["decode_tokens"] += 1
+                if self.metrics_enabled:
+                    self.dispatch_log.append(
+                        (self.step_idx, req.req_id, "decode", 1))
             else:                                    # prefill chunk
                 toks = req.known_tokens[nc:nc + n]
                 chunk_tok[s, :n] = toks
@@ -497,6 +601,9 @@ class ContinuousBatchingEngine:
                 sample[s] = reaches_end
                 prefill_toks += n
                 self.stats["prefill_tokens"] += n
+                if self.metrics_enabled:
+                    self.dispatch_log.append(
+                        (self.step_idx, req.req_id, "prefill", n))
                 if reaches_end:
                     req.state = RequestState.RUNNING
                 if self.prefix_sharing:
@@ -508,6 +615,7 @@ class ContinuousBatchingEngine:
                                                  req.known_tokens, nc + n)
             req.num_computed_tokens = nc + n
             self.pool_host.advance(req.req_id, n)
+            n_rows += 1
             if sample[s]:
                 harvest.append((s, seq))
 
@@ -527,37 +635,76 @@ class ContinuousBatchingEngine:
         self.stats["sim_energy_nj"] += nrg
         self.stats["mixed_steps"] += 1
 
+        if self.metrics_enabled or self.tracer.enabled:
+            # per-iteration batch composition + pool pressure.  stats() is a
+            # full pool scan, but pools are a few hundred pages at most and
+            # this runs once per step, off by default with metrics=False.
+            ps = self.pool_host.stats()
+            if self.metrics_enabled:
+                self._h_batch.observe(n_rows)
+                self._h_chunk.observe(prefill_toks)
+                self._g_free.set(ps.free_pages)
+                self._g_shared.set(ps.shared_pages)
+                self._g_cached.set(ps.cached_pages)
+                self._g_held.set(ps.unique_pages)
+                self._g_evict.set(ps.cache_evictions)
+            if self.tracer.enabled:
+                self.tracer.counter(
+                    "pool_pages", free=ps.free_pages, shared=ps.shared_pages,
+                    cached=ps.cached_pages)
+
         (self.pool, sampled, self._tok, self._keys) = self._mixed(
             self.params, self.pool, jnp.asarray(chunk_tok), self._tok,
             jnp.asarray(use_dev), jnp.asarray(start), jnp.asarray(span),
             self._pt, self._wstart, jnp.asarray(sample), self._temp,
             self._keys)
-        self._pending.append({"sampled": sampled, "slots": harvest})
+        self._pending.append({"sampled": sampled, "slots": harvest,
+                              "step": self.step_idx})
 
     def _harvest(self, entry: dict) -> list[Request]:
-        sampled = np.asarray(entry["sampled"])
-        finished = []
-        for slot, seq in entry["slots"]:
-            req = seq.request
-            if req.state is not RequestState.RUNNING:
-                continue  # finished by an earlier harvest, or preempted
-            if self.running.get(slot) is not seq:
-                continue  # slot was recycled after an eviction
-            self._emit(seq, int(sampled[slot]))
-            if req.state is RequestState.FINISHED:
-                finished.append(req)
-        return finished
+        step = entry.get("step", -1)
+        with self.tracer.span("harvest", step=step):
+            with self.tracer.span("sync", step=step):
+                sampled = np.asarray(entry["sampled"])  # blocks on device
+            # token timestamps are taken HERE, after the device sync: with
+            # the one-step harvest lag a dispatch-time stamp would antedate
+            # the token (see request.py docstring)
+            now = time.perf_counter()
+            finished = []
+            for slot, seq in entry["slots"]:
+                req = seq.request
+                if req.state is not RequestState.RUNNING:
+                    continue  # finished by an earlier harvest, or preempted
+                if self.running.get(slot) is not seq:
+                    continue  # slot was recycled after an eviction
+                self._emit(seq, int(sampled[slot]), now)
+                if req.state is RequestState.FINISHED:
+                    finished.append(req)
+            return finished
 
-    def _emit(self, seq: Sequence, token: int) -> None:
+    def _emit(self, seq: Sequence, token: int,
+              now: Optional[float] = None) -> None:
         req = seq.request
         req.emit(token)
         self.stats["tokens_out"] += 1
+        if now is None:
+            now = time.perf_counter()
+        if len(req.output_tokens) == 1:
+            req.t_first_token = now
+            req.mark("first_token", now)
+            if self.metrics_enabled:
+                self._h_ttft.observe((now - req.t_arrival) * 1e3)
+        elif self.metrics_enabled and req.t_last_token > 0:
+            self._h_itl.observe((now - req.t_last_token) * 1e3)
+        req.t_last_token = now
         sp = req.sampling
         if sp.eos_id is not None and token == sp.eos_id:
-            req.finish(FinishReason.EOS, self.step_idx)
+            req.finish(FinishReason.EOS, self.step_idx, now)
         elif len(req.output_tokens) >= sp.max_new_tokens:
-            req.finish(FinishReason.LENGTH, self.step_idx)
+            req.finish(FinishReason.LENGTH, self.step_idx, now)
         if req.state is RequestState.FINISHED:
+            if self.metrics_enabled:
+                self._h_e2e.observe((now - req.t_arrival) * 1e3)
             self._evict(seq)
 
     def _evict(self, seq: Sequence) -> None:
@@ -585,7 +732,9 @@ class ContinuousBatchingEngine:
         req.num_computed_tokens = 0
         req.state = RequestState.WAITING
         req.num_preemptions += 1
+        req.t_enqueued = req.mark("preempted")  # queue-wait clock restarts
         self.stats["preemptions"] += 1
+        self.tracer.instant("preempt", req_id=req.req_id)
         self.waiting.appendleft(req)
 
 

@@ -91,6 +91,14 @@ class PoolStats:
                               # stack, plus int8 per-(page, head) scales)
     pool_bytes: int = 0       # page_bytes * usable pages (sink excluded)
     allocated_bytes: int = 0  # page_bytes * allocated_pages
+    # high-water marks: the most pages (referenced or cached) the pool ever
+    # held at once, and their physical weight — what a capacity planner
+    # sizes against, since exit-time occupancy hides the mid-run peak
+    peak_pages: int = 0
+    peak_bytes: int = 0
+    # LRU reclaim pressure: cached-only pages evicted from the trie because
+    # an allocation needed them (0 == the cache never had to shrink)
+    cache_evictions: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +192,8 @@ class PagedKVPool:
         self.prefix_lookup_tokens = 0
         self.pages_allocated_total = 0            # fresh pages drawn
         self.cow_forks = 0
+        self.cache_evictions = 0                  # LRU trie reclaims
+        self.peak_pages = 0                       # high-water live pages
 
     # -- queries -----------------------------------------------------------
 
@@ -254,6 +264,9 @@ class PagedKVPool:
             page_bytes=self.page_bytes,
             pool_bytes=self.page_bytes * (self.n_pages - 1),
             allocated_bytes=self.page_bytes * allocated,
+            peak_pages=self.peak_pages,
+            peak_bytes=self.page_bytes * self.peak_pages,
+            cache_evictions=self.cache_evictions,
         )
 
     # -- page supply (free list + LRU trie reclaim) ------------------------
@@ -262,7 +275,13 @@ class PagedKVPool:
         while not self._free:
             self._evict_cached_lru()
         self.pages_allocated_total += 1
-        return self._free.pop()
+        page = self._free.pop()
+        # every draw passes through here, so the live-page high-water mark
+        # (referenced + cached == everything off the free list) is exact
+        live = self.n_pages - 1 - len(self._free)
+        if live > self.peak_pages:
+            self.peak_pages = live
+        return page
 
     def _draw(self, n: int) -> list[int]:
         """Atomically draw ``n`` fresh pages (evicting cache as needed); on
@@ -312,6 +331,7 @@ class PagedKVPool:
         pick = best_free or best
         if pick is None:
             raise PoolOOM("pool exhausted: no free or reclaimable pages")
+        self.cache_evictions += 1
         _, kind, node = pick
         if kind == "partial":
             self._drop_partial(node)

@@ -28,6 +28,18 @@ stream across the eviction).
 sequence's page allocation, and its prefill target.  One request owns
 exactly one sequence (beam/parallel sampling would fan a request out into
 several; that is future work, see ROADMAP).
+
+Lifecycle timestamps: every transition is stamped with ``time.perf_counter``
+(``t_arrival`` -> ``t_admitted`` -> ``t_first_token`` -> ``t_finished``,
+plus an append-only ``events`` log that also records preemptions and
+resumes), and the derived latencies — TTFT, queue wait, end-to-end — are
+exposed as properties.  One contract matters for correctness of the
+numbers: the engine dispatches step N+1 before step N's sampled tokens are
+read back (lagged harvest), so token timestamps — ``t_first_token`` in
+particular — are taken at device-sync HARVEST time, when the token value
+actually exists on the host, never at dispatch time.  A dispatch-time stamp
+would antedate the token by up to a full step and make TTFT non-monotone
+across queue positions.
 """
 
 from __future__ import annotations
@@ -35,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
+import time
 from typing import Callable, Optional
 
 
@@ -88,6 +101,47 @@ class Request:
     arrived_step: int = -1
     admitted_step: int = -1
     finished_step: int = -1
+    # wall-clock lifecycle stamps (time.perf_counter; -1.0 = not reached).
+    # Token stamps are taken at device-sync harvest time — see module
+    # docstring — so TTFT/ITL reflect when the token value reached the host.
+    t_arrival: float = -1.0
+    t_enqueued: float = -1.0     # arrival, re-stamped on preemption (the
+                                 # queue-wait clock restarts for a victim)
+    t_admitted: float = -1.0     # first admission only
+    t_first_token: float = -1.0
+    t_last_token: float = -1.0
+    t_finished: float = -1.0
+    # append-only (event, perf_counter) log: arrived / admitted / resumed /
+    # first_token / preempted / finished
+    events: list = dataclasses.field(default_factory=list)
+
+    def mark(self, event: str, t: Optional[float] = None) -> float:
+        """Stamp a lifecycle event into the log; returns the timestamp."""
+        if t is None:
+            t = time.perf_counter()
+        self.events.append((event, t))
+        return t
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (seconds), None until the token lands."""
+        if self.t_first_token < 0 or self.t_arrival < 0:
+            return None
+        return self.t_first_token - self.t_arrival
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Arrival -> first admission (seconds)."""
+        if self.t_admitted < 0 or self.t_arrival < 0:
+            return None
+        return self.t_admitted - self.t_arrival
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        """Arrival -> finished (seconds)."""
+        if self.t_finished < 0 or self.t_arrival < 0:
+            return None
+        return self.t_finished - self.t_arrival
 
     @property
     def prompt_len(self) -> int:
@@ -114,10 +168,12 @@ class Request:
         if self.on_token is not None:
             self.on_token(self, token)
 
-    def finish(self, reason: FinishReason, step: int) -> None:
+    def finish(self, reason: FinishReason, step: int,
+               now: Optional[float] = None) -> None:
         self.state = RequestState.FINISHED
         self.finish_reason = reason
         self.finished_step = step
+        self.t_finished = self.mark("finished", now)
 
 
 @dataclasses.dataclass
@@ -135,6 +191,9 @@ class Sequence:
     page_ids: list[int]    # physical pages, in logical order
     prefill_target: int    # known tokens to (re)compute before decoding
     admit_order: int = 0   # monotonic admission stamp: lower = higher priority
+    t_admitted: float = -1.0   # when THIS sequence entered its slot (a
+                               # resumed request gets a fresh sequence, so
+                               # this is per-admission, unlike the request's)
 
     @property
     def req_id(self) -> int:

@@ -62,13 +62,25 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Protocol, Sequence as Seq
+from typing import Optional, Protocol, Sequence as Seq, runtime_checkable
 
 from repro.serving.kv_pool import NO_MATCH, PagedKVPool
 from repro.serving.request import Request, RequestState, Sequence
 
 
+@runtime_checkable
 class CostModel(Protocol):
+    """What the scheduler needs from a step-pricing model.
+
+    The latency and energy signatures are deliberately symmetric: BOTH
+    prefill methods take the ``cached_tokens`` discount (prefix-trie hits
+    cost neither weight reads nor CIM cycles, in nanojoules as much as in
+    nanoseconds).  ``tests/test_telemetry.py`` holds the shipped models to
+    this exact protocol — the ``prefill_nj`` signature had drifted
+    (implementations grew the kwarg, the protocol did not) and only a
+    conformance test keeps that from re-happening.
+    """
+
     def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
         """Predicted latency of one decode step over ``n_seqs`` sequences."""
         ...
@@ -83,8 +95,9 @@ class CostModel(Protocol):
         """Predicted energy of one decode step (0 if not modeled)."""
         ...
 
-    def prefill_nj(self, n_tokens: int) -> float:
-        """Predicted energy of prefilling ``n_tokens`` (0 if not modeled)."""
+    def prefill_nj(self, n_tokens: int, cached_tokens: int = 0) -> float:
+        """Predicted energy of prefilling ``n_tokens``, with the same
+        cached-token discount as ``prefill_ns`` (0 if not modeled)."""
         ...
 
 
