@@ -15,7 +15,9 @@ recomputing (and re-storing) the shared prefix — the exit report prints
 pages saved and prefill tokens skipped.  ``--no-prefix-sharing`` turns the
 trie off for comparison.  ``--kv-dtype int8`` serves quantized KV pages
 (per-(page, head) fp32 scales, in-kernel dequant) — the exit report prints
-the pool's physical bytes, a quarter of fp32 per page.  ``--metrics``
+the pool's physical bytes, a quarter of fp32 per page.  ``--deadline-s``
+bounds every request's wall-clock lifetime — the exit report counts the
+resulting TIMEOUT/ABORTED/SHED exits.  ``--metrics``
 prints the full telemetry exit report (TTFT / inter-token / queue-wait
 histograms, pool gauges, the cost-model calibration fit);
 ``--trace-out PATH`` saves a Chrome trace of every engine iteration's
@@ -56,6 +58,10 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the refcounted prefix trie (baseline)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline: the engine's "
+                         "deadline sweep drives expired requests to "
+                         "FINISHED/TIMEOUT with pages freed")
     ap.add_argument("--cost-model", choices=["none", "hbm", "cim"],
                     default="cim")
     ap.add_argument("--paged-kernel", action="store_true",
@@ -157,7 +163,8 @@ def main():
         engine.add_request(
             prompt,
             SamplingParams(max_new_tokens=args.new_tokens,
-                           temperature=args.temperature, seed=i),
+                           temperature=args.temperature, seed=i,
+                           deadline_s=args.deadline_s),
             on_token=lambda r, t: print(
                 f"  step {engine.step_idx:3d} req{r.req_id} += {t}"),
         )
@@ -183,6 +190,9 @@ def main():
           f"tokens_out={s['tokens_out']} decode_tokens={s['decode_tokens']} "
           f"prefill_tokens={s['prefill_tokens']} "
           f"preemptions={s['preemptions']}")
+    print(f"aborted-family exits: aborts={s['aborts']} "
+          f"timeouts={s['timeouts']} sheds={s['sheds']} "
+          f"(degraded_chunks={s['degraded_chunks']})")
     ps = engine.pool_host.stats()
     print(f"pool at exit: {ps.allocated_pages}/{ps.n_pages} pages allocated, "
           f"{ps.free_pages} free, {ps.cached_pages} cached for reuse")
@@ -211,7 +221,9 @@ def main():
 
         print()
         print(render_report(engine.registry, [engine.calibration]))
-        lat = [(r.req_id, r.ttft, r.queue_wait) for r in finished]
+        # aborted-before-first-token requests have no TTFT to report
+        lat = [(r.req_id, r.ttft, r.queue_wait) for r in finished
+               if r.ttft is not None and r.queue_wait is not None]
         print("per-request (ttft / queue wait, ms):")
         for rid, ttft, qw in sorted(lat):
             print(f"  req{rid}: {ttft * 1e3:7.2f} / {qw * 1e3:7.2f}")

@@ -75,6 +75,21 @@ def latest_step(directory) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(directory, step: Optional[int] = None) -> dict:
+    """Load a checkpoint's manifest (leaf metadata + the ``extra`` dict)
+    WITHOUT touching the array leaves.  The serving snapshot path needs
+    this ordering: the host-side state in ``extra`` describes the engine
+    configuration from which the ``like`` tree for ``restore_checkpoint``
+    is built, so the manifest must be readable first and on its own."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    src = directory / f"step_{step:08d}"
+    return json.loads((src / "manifest.json").read_text())
+
+
 def restore_checkpoint(directory, step: int, like, shardings=None):
     """Restore into the structure of ``like``; optionally device_put with a
     target sharding pytree (resharding across meshes)."""
@@ -99,4 +114,5 @@ def restore_checkpoint(directory, step: int, like, shardings=None):
     return state, manifest
 
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "read_manifest",
+           "latest_step"]

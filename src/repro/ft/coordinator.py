@@ -73,6 +73,51 @@ class StragglerMonitor:
         )
 
 
+class EngineSupervisor:
+    """Liveness watchdog + snapshot custodian for a serving engine.
+
+    Bridges the training-side control plane to serving fault tolerance
+    (``serving/snapshot.py``): ``attach`` wires an engine's per-step
+    heartbeat into a ``HeartbeatRegistry``, ``publish`` keeps the latest
+    engine snapshot, and when the engine goes quiet past the timeout
+    (``engine_failed``), ``recover`` rebuilds a replacement engine from
+    that snapshot — token-identical for every surviving request, per the
+    recovery contract in ``serving/snapshot.py``.
+    """
+
+    def __init__(self, timeout_s: float = 60.0, rank: int = 0):
+        self.heartbeat = HeartbeatRegistry(timeout_s=timeout_s)
+        self.rank = rank
+        self.last_snapshot: Optional[dict] = None
+
+    def attach(self, engine) -> None:
+        """Point the engine's heartbeat at this supervisor; every
+        ``engine.step()`` then refreshes the liveness stamp."""
+        engine.heartbeat = self.heartbeat
+        engine.heartbeat_rank = self.rank
+        engine.heartbeat.report(self.rank, engine.step_idx)
+
+    def publish(self, snapshot: dict) -> None:
+        """Record the engine's newest snapshot as the recovery point."""
+        self.last_snapshot = snapshot
+
+    def engine_failed(self, now: Optional[float] = None) -> bool:
+        """True once the attached engine has missed the heartbeat timeout."""
+        return self.rank in self.heartbeat.failed_ranks(now)
+
+    def recover(self, cfg, params, **engine_kw):
+        """Rebuild the engine from the last published snapshot (raises if
+        none was ever published) and re-attach its heartbeat."""
+        if self.last_snapshot is None:
+            raise RuntimeError(
+                "no snapshot published; nothing to recover from")
+        from repro.serving.snapshot import restore_engine
+
+        engine = restore_engine(self.last_snapshot, cfg, params, **engine_kw)
+        self.attach(engine)
+        return engine
+
+
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
     """What the runtime does after failures/stragglers are confirmed."""
@@ -125,6 +170,7 @@ def plan_elastic_remesh(
 
 __all__ = [
     "HeartbeatRegistry",
+    "EngineSupervisor",
     "StragglerMonitor",
     "ElasticPlan",
     "plan_elastic_remesh",

@@ -71,6 +71,43 @@ fitting the scale factor ``benchmarks/serve_throughput.py`` publishes in
 only the raw counters; with tracing off every span hook is a shared no-op
 singleton.
 
+Fault tolerance / recovery contract:  serving keeps running — and keeps
+its outputs exact — through client aborts, SLO expiry, overload, and
+process death.  The contract has four legs:
+
+  * DEADLINES & CANCELLATION: ``SamplingParams.deadline_s`` bounds a
+    request's total wall-clock lifetime (a per-step sweep drives expired
+    requests — queued or mid-generation — to FINISHED/TIMEOUT) and
+    ``engine.cancel(req_id)`` aborts at any lifecycle stage.  Teardown of
+    a resident sequence ALWAYS drains the in-flight dispatch chain first:
+    the engine's one-step harvest lag means a cancelled slot could
+    otherwise be resurrected (or written into) by a step dispatched
+    before the cancel landed.  Pages are released refcount-correctly —
+    shared prefix pages survive with their other holders.
+  * OVERLOAD SHEDDING: ``max_queue_wait_s`` is the admission-control
+    budget — a WAITING request past it that the scheduler still cannot
+    admit is SHED (it never held pages, so shedding is pure queue
+    surgery), and under page pressure the scheduler first DEGRADES
+    prefill chunk sizes (``SchedulerConfig.degrade_free_frac``) before
+    resorting to preemption.  ``priority`` orders admission and
+    preemption; ties keep FIFO.
+  * SNAPSHOT/RESTORE: ``engine.snapshot()`` /
+    ``ContinuousBatchingEngine.restore()`` round-trip the complete
+    serving state — queues, cursors, page tables, prefix trie, device KV,
+    per-slot PRNG streams — through ``checkpoint/store.py`` (atomic
+    rename, per-leaf CRC32).  A full restore resumes mid-flight requests
+    token-identically (greedy AND sampled); a degraded restore (no KV)
+    falls back to the preemption contract: everyone re-enters WAITING and
+    recomputes, still token-identical.  ``ft.coordinator.EngineSupervisor``
+    watches the engine's per-step heartbeat and rebuilds a quiet engine
+    from its last published snapshot.
+  * FAULT INJECTION: ``serving/faults.py`` is a seeded, schedulable chaos
+    source (pool exhaustion, dispatch failure, simulated crashes around
+    the harvest, clock skew) the engine hosts via ``fault_injector=``;
+    ``assert_recovery_invariants`` is the shared post-fault oracle (pool
+    refcounts exact, no leaked pages, slot accounting exact) used by the
+    chaos tests and the ``serve_throughput.py`` robustness sweep.
+
 Module map:
   request.py   — ``Request``/``Sequence`` lifecycle, the
                  ``num_computed_tokens`` cursor (starts at the matched
@@ -106,6 +143,12 @@ Module map:
   metrics.py   — dependency-free ``MetricsRegistry`` (Counter / Gauge /
                  Histogram), the dict-compatible ``EngineStats``, and
                  ``Calibration`` (predicted-vs-measured cost-model fit).
+  faults.py    — ``FaultInjector`` (seeded, schedulable chaos),
+                 ``DispatchFailure`` / ``SimulatedCrash``, and the
+                 ``assert_recovery_invariants`` post-fault oracle.
+  snapshot.py  — ``snapshot_engine`` / ``restore_engine`` and the on-disk
+                 round trip (``save_snapshot`` / ``load_snapshot``) via
+                 ``checkpoint/store.py``.
   tracing.py   — ``ChromeTracer`` Chrome trace-event spans (Perfetto),
                  the no-op ``NULL_TRACER``, and ``validate_trace`` (the
                  machine-checkable "loads in Perfetto").
@@ -127,6 +170,10 @@ cost models price the KV stream at the stored width.
 
 from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
                                   GenerationConfig, ServeEngine)
+from repro.serving.faults import (DispatchFailure,  # noqa: F401
+                                  FaultInjector, InjectedFault,
+                                  SimulatedCrash,
+                                  assert_recovery_invariants)
 from repro.serving.kv_pool import (PagedKVPool, PoolOOM,  # noqa: F401
                                    PoolStats, PrefixMatch)
 from repro.serving.metrics import (Calibration, Counter,  # noqa: F401

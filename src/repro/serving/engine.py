@@ -52,6 +52,19 @@ under token/page/latency budgets priced by the cost model.
     each step's cost-model prediction with measured wall time.
     ``metrics=False`` keeps only the raw counters; with tracing off the
     span hooks are no-op singletons — near-zero overhead by construction.
+  * the engine is *fault-tolerant*: per-request ``deadline_s`` /
+    ``max_queue_wait_s`` budgets are enforced by a per-step deadline sweep
+    and by scheduler admission control (expired requests finish as
+    TIMEOUT / SHED with pages freed refcount-correctly), ``cancel()``
+    aborts a request at any lifecycle stage — always *after* draining the
+    in-flight dispatch chain, so the one-step harvest lag can never
+    resurrect a torn-down sequence — ``snapshot()`` /
+    ``ContinuousBatchingEngine.restore()`` round-trip the complete
+    serving state (queues, cursors, page tables, prefix trie, device KV)
+    through ``checkpoint/store.py``, and a ``fault_injector`` hook lets
+    ``serving/faults.py`` drive chaos testing (pool exhaustion, dispatch
+    failure, simulated crashes, clock skew) against the recovery
+    invariants.  See ``serving/__init__`` for the recovery contract.
 """
 
 from __future__ import annotations
@@ -71,6 +84,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.faults import DispatchFailure
 from repro.serving.kv_pool import PagedKVPool, PoolOOM, SINK_PAGE
 from repro.serving.metrics import (Calibration, EngineStats,
                                    LATENCY_MS_BUCKETS, MetricsRegistry,
@@ -179,7 +193,9 @@ class ContinuousBatchingEngine:
                  prefix_sharing: bool = True,
                  kv_dtype: Optional[str] = None,
                  metrics: bool = True,
-                 trace: Union[bool, str, os.PathLike, None] = None):
+                 trace: Union[bool, str, os.PathLike, None] = None,
+                 fault_injector=None,
+                 heartbeat=None, heartbeat_rank: int = 0):
         if cfg.layer_kind != "attn":
             raise ValueError(
                 "continuous batching needs an attn stack; SSM/hybrid models "
@@ -309,6 +325,22 @@ class ContinuousBatchingEngine:
             self._g_evict = g("pool.cache_evictions")
         self._mixed = functools.partial(_mixed_step_jit, cfg=self.cfg)
 
+        # -- fault tolerance ------------------------------------------------
+        # ``_clock`` is THE time source for lifecycle stamps, deadline
+        # sweeps and queue-wait shedding (``serving/faults.py`` skews it to
+        # test deadline handling; the calibration above keeps raw
+        # perf_counter so measured step durations never inherit the skew).
+        self._clock = time.perf_counter
+        self.faults = fault_injector
+        # optional liveness reporting: ``heartbeat.report(rank, step)`` is
+        # called once per step — ``ft.coordinator.EngineSupervisor`` watches
+        # it and recovers a quiet engine from its last published snapshot
+        self.heartbeat = heartbeat
+        self.heartbeat_rank = heartbeat_rank
+        # requests finished outside _step_inner (``cancel()``, the drains
+        # it triggers) surface through the next ``step()``'s return value
+        self._overflow: list[Request] = []
+
     # -- request intake ----------------------------------------------------
 
     def add_request(self, prompt, sampling: Optional[SamplingParams] = None,
@@ -336,22 +368,29 @@ class ContinuousBatchingEngine:
             req.num_cached_tokens = self.pool_host.match_prefix(
                 req.known_tokens).n_tokens
         req.arrived_step = self.step_idx
-        req.t_arrival = req.t_enqueued = req.mark("arrived")
+        req.t_arrival = req.t_enqueued = req.mark("arrived", self._clock())
         self.waiting.append(req)
         if self.metrics_enabled:
             self._g_queue.set(len(self.waiting))
         return req
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running or self._pending)
+        return bool(self.waiting or self.running or self._pending
+                    or self._overflow)
 
     # -- one scheduler iteration -------------------------------------------
 
     def step(self) -> list[Request]:
         """Plan and dispatch ONE mixed forward (decode tokens + prefill
         chunks), harvest the previous one, evict finished sequences.
-        Returns requests finished this call."""
+        Returns requests finished this call (including any aborted by
+        ``cancel()``, the deadline sweep, or admission-control shedding)."""
         self.step_idx += 1
+        if self.faults is not None:
+            self.faults.on_step(self)
+        if self.heartbeat is not None:
+            self.heartbeat.report(self.heartbeat_rank, self.step_idx,
+                                  now=self._clock())
         t0 = time.perf_counter()
         pred0 = self.stats["sim_latency_ns"]
         with self.tracer.span("step", step=self.step_idx):
@@ -368,6 +407,12 @@ class ContinuousBatchingEngine:
 
     def _step_inner(self) -> list[Request]:
         finished: list[Request] = []
+        # surface requests finished outside the step loop (cancel() and the
+        # drains it triggers) through this step's return value
+        if self._overflow:
+            finished.extend(self._overflow)
+            self._overflow.clear()
+        finished.extend(self._sweep_deadlines(self._clock()))
 
         plan = self._plan()
         if plan.preemptions:
@@ -375,8 +420,7 @@ class ContinuousBatchingEngine:
             # sample must land (and its PRNG carry settle) before its state
             # is torn down — then replan, because the drain may have finished
             # sequences and freed enough pages to avoid evicting anyone
-            while self._pending:
-                finished.extend(self._harvest(self._pending.pop(0)))
+            finished.extend(self.drain())
             plan = self._plan()
             if plan.preemptions:
                 for seq in plan.preemptions:
@@ -388,6 +432,19 @@ class ContinuousBatchingEngine:
                 # feasible still is — no further preemption can be needed.
                 plan = self._plan()
                 assert not plan.preemptions, "preemption did not converge"
+
+        # admission control: the final plan's sheds are WAITING requests
+        # past their queue-wait budget that still could not be admitted —
+        # they hold no pages, so aborting them is pure queue surgery
+        for req in plan.sheds:
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                continue   # cancelled between plan and execution
+            self._finish_abort(req, FinishReason.SHED)
+            finished.append(req)
+        if plan.degraded:
+            self.stats["degraded_chunks"] += plan.degraded
 
         spans = list(plan.spans)
         # reserve the mandatory decodes' pages BEFORE admissions touch the
@@ -403,13 +460,117 @@ class ContinuousBatchingEngine:
                     self._pt_dirty.add(seq.slot)
         spans.extend(self._admit(plan.admissions))
         if spans:
-            self._dispatch(spans)
+            try:
+                self._dispatch(spans)
+            except DispatchFailure:
+                # recover by the PR 3 preemption contract: land every
+                # in-flight step (PRNG carries settle), then evict ALL
+                # residents to WAITING with pages freed and cursors reset —
+                # the failed dispatch enqueued no device work, so recompute
+                # on resume reproduces the exact token streams
+                self.stats["dispatch_failures"] += 1
+                self.tracer.instant("dispatch_failure", step=self.step_idx)
+                finished.extend(self.drain())
+                for seq in sorted(self.running.values(),
+                                  key=lambda s: (s.request.sampling.priority,
+                                                 -s.admit_order)):
+                    self._preempt(seq)
+                return finished
 
+        if self.faults is not None:
+            self.faults.on_harvest(self, "before")
         # harvest everything but the step just dispatched (one-step lag)
         keep_last = 1 if spans else 0
         while len(self._pending) > keep_last:
             finished.extend(self._harvest(self._pending.pop(0)))
+        if self.faults is not None:
+            self.faults.on_harvest(self, "after")
         return finished
+
+    # -- deadlines / cancellation ------------------------------------------
+
+    def drain(self) -> list[Request]:
+        """Harvest every in-flight dispatched step (device sync).  The
+        engine dispatches step N+1 before step N's tokens are read back;
+        any state teardown — cancel, preemption, snapshot — must land those
+        tokens first, or the lag could resurrect (or write into) state the
+        teardown just released."""
+        done: list[Request] = []
+        while self._pending:
+            done.extend(self._harvest(self._pending.pop(0)))
+        return done
+
+    def cancel(self, req_id: int,
+               reason: FinishReason = FinishReason.ABORTED) -> bool:
+        """Abort a request by id (client disconnect).  A WAITING request
+        leaves the queue immediately; a resident sequence is torn down only
+        after ``drain()`` — see there — and its pages are released
+        refcount-correctly (shared prefix pages survive with their other
+        holders).  Returns True if the request was cancelled, False if the
+        id is unknown or already finished (a second cancel of the same id
+        is a no-op, not an error)."""
+        for req in list(self.waiting):
+            if req.req_id == req_id:
+                self.waiting.remove(req)
+                self._finish_abort(req, reason)
+                self._overflow.append(req)
+                return True
+        seq = next((s for s in self.running.values()
+                    if s.req_id == req_id), None)
+        if seq is None:
+            return False
+        self._overflow.extend(self.drain())
+        req = seq.request
+        if (req.state is RequestState.FINISHED
+                or self.running.get(seq.slot) is not seq):
+            return False   # the drain finished it before the cancel landed
+        self._finish_abort(req, reason)
+        self._evict(seq)
+        self._overflow.append(req)
+        return True
+
+    def _sweep_deadlines(self, now: float) -> list[Request]:
+        """Drive every request past its ``deadline_s`` to FINISHED/TIMEOUT:
+        queued requests leave the queue, resident sequences are evicted
+        (after the pending-harvest drain) with pages freed immediately."""
+        done: list[Request] = []
+        for req in [r for r in self.waiting if self._expired(r, now)]:
+            self.waiting.remove(req)
+            self._finish_abort(req, FinishReason.TIMEOUT, now)
+            done.append(req)
+        victims = [s for s in self.running.values()
+                   if self._expired(s.request, now)]
+        if victims:
+            done.extend(self.drain())
+            for seq in victims:
+                if (seq.request.state is RequestState.FINISHED
+                        or self.running.get(seq.slot) is not seq):
+                    continue   # the drain finished it first
+                self._finish_abort(seq.request, FinishReason.TIMEOUT, now)
+                self._evict(seq)
+                done.append(seq.request)
+        return done
+
+    @staticmethod
+    def _expired(req: Request, now: float) -> bool:
+        dl = req.sampling.deadline_s
+        return (dl is not None and req.t_arrival >= 0
+                and now - req.t_arrival > dl)
+
+    _ABORT_COUNTER = {FinishReason.ABORTED: "aborts",
+                      FinishReason.TIMEOUT: "timeouts",
+                      FinishReason.SHED: "sheds"}
+
+    def _finish_abort(self, req: Request, reason: FinishReason,
+                      now: Optional[float] = None) -> None:
+        """Complete the ABORTED-family lifecycle: cause in the event log,
+        finished stamp + finish_reason, stats counter, trace instant."""
+        if now is None:
+            now = self._clock()
+        req.mark(reason.value, now)
+        req.finish(reason, self.step_idx, now)
+        self.stats[self._ABORT_COUNTER[reason]] += 1
+        self.tracer.instant("abort", req_id=req.req_id, reason=reason.value)
 
     def run(self) -> list[Request]:
         """Drive steps until every request has finished."""
@@ -444,7 +605,7 @@ class ContinuousBatchingEngine:
         with self.tracer.span("plan", step=self.step_idx):
             return self.scheduler.plan_step(
                 list(self.waiting), list(self.running.values()),
-                self.pool_host)
+                self.pool_host, now=self._clock())
 
     def _admit(self, admissions: list[tuple[Request, int]]
                ) -> list[tuple[Sequence, int]]:
@@ -469,8 +630,14 @@ class ContinuousBatchingEngine:
         rows, temps, keys, wstarts = [], [], [], []
         cow_ops: list[tuple[int, int]] = []
         for req, chunk in admissions:
-            assert self.waiting[0] is req, "admissions must be a FIFO prefix"
-            self.waiting.popleft()
+            # admissions come in priority-then-FIFO order, not necessarily a
+            # queue prefix (priorities / sheds may skip entries) — remove by
+            # identity
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                raise AssertionError(
+                    f"admitted request {req.req_id} is not in the queue")
             req.state = RequestState.PREFILLING
             if req.admitted_step < 0:
                 req.admitted_step = self.step_idx
@@ -497,7 +664,7 @@ class ContinuousBatchingEngine:
                                                          chunk), 0
             req.num_computed_tokens = matched
             req.num_cached_tokens = matched
-            now = time.perf_counter()
+            now = self._clock()
             if req.t_admitted < 0:
                 req.t_admitted = now
             req.mark("resumed" if req.num_preemptions else "admitted", now)
@@ -551,6 +718,11 @@ class ContinuousBatchingEngine:
             self._dispatch_inner(spans)
 
     def _dispatch_inner(self, spans: list[tuple[Sequence, int]]) -> None:
+        # injected dispatch failures fire HERE, before any host bookkeeping
+        # (cursor advances, page draws) — the recovery path in _step_inner
+        # assumes a failed dispatch mutated nothing
+        if self.faults is not None:
+            self.faults.on_dispatch(self)
         B = self.max_slots
         Sb = _bucket(max(n for _, n in spans))
         self.last_span_bucket = Sb  # instrumentation: which jit variant ran
@@ -669,7 +841,7 @@ class ContinuousBatchingEngine:
             # token timestamps are taken HERE, after the device sync: with
             # the one-step harvest lag a dispatch-time stamp would antedate
             # the token (see request.py docstring)
-            now = time.perf_counter()
+            now = self._clock()
             finished = []
             for slot, seq in entry["slots"]:
                 req = seq.request
@@ -688,7 +860,7 @@ class ContinuousBatchingEngine:
         req.emit(token)
         self.stats["tokens_out"] += 1
         if now is None:
-            now = time.perf_counter()
+            now = self._clock()
         if len(req.output_tokens) == 1:
             req.t_first_token = now
             req.mark("first_token", now)
@@ -732,10 +904,50 @@ class ContinuousBatchingEngine:
         req.num_computed_tokens = 0
         req.state = RequestState.WAITING
         req.num_preemptions += 1
-        req.t_enqueued = req.mark("preempted")  # queue-wait clock restarts
+        # queue-wait clock restarts (this also resets the shed budget — a
+        # victim gets a fresh max_queue_wait_s, it already earned its slot)
+        req.t_enqueued = req.mark("preempted", self._clock())
         self.stats["preemptions"] += 1
         self.tracer.instant("preempt", req_id=req.req_id)
         self.waiting.appendleft(req)
+
+    # -- snapshot / restore ------------------------------------------------
+
+    def snapshot(self, include_kv: bool = True) -> dict:
+        """Serialize the complete serving state (queues, cursors, page
+        tables, prefix trie, slot arrays, device KV) after draining the
+        in-flight dispatch chain.  ``include_kv=False`` captures only host
+        state — restore then falls back to recompute-on-resume."""
+        from repro.serving.snapshot import snapshot_engine
+
+        return snapshot_engine(self, include_kv=include_kv)
+
+    def save_snapshot(self, directory, include_kv: bool = True) -> dict:
+        """``snapshot()`` persisted through ``checkpoint/store.py`` (atomic
+        rename, per-leaf CRC32).  Returns the in-memory snapshot."""
+        from repro.serving.snapshot import save_snapshot
+
+        snap = self.snapshot(include_kv=include_kv)
+        save_snapshot(directory, snap)
+        return snap
+
+    @classmethod
+    def restore(cls, snap: dict, cfg: ModelConfig, params,
+                **engine_kw) -> "ContinuousBatchingEngine":
+        """Rebuild an engine from a ``snapshot()`` dict — see
+        ``serving/snapshot.py`` for the recovery contract."""
+        from repro.serving.snapshot import restore_engine
+
+        return restore_engine(snap, cfg, params, **engine_kw)
+
+    @classmethod
+    def restore_latest(cls, directory, cfg: ModelConfig, params,
+                       **engine_kw) -> "ContinuousBatchingEngine":
+        """Restore from the newest on-disk snapshot under ``directory``."""
+        from repro.serving.snapshot import load_snapshot, restore_engine
+
+        return restore_engine(load_snapshot(directory, cfg), cfg, params,
+                              **engine_kw)
 
 
 class ServeEngine:

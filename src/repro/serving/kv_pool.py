@@ -584,6 +584,112 @@ class PagedKVPool:
                         f"write [{lo},{hi}) overlaps {ent.n_rows} committed "
                         f"rows of partial page {p}")
 
+    # -- snapshot / restore ------------------------------------------------
+
+    def export_state(self) -> dict:
+        """Serialize the full host-side pool state to a JSON-safe dict.
+
+        The trie is flattened into a node list in parent-before-child order
+        (root at index 0, ``parent`` as a list index) with partial entries
+        inlined on their owning node.  Derived structures — ``_ref``
+        (refcount == table holders, the invariant), ``_cached``,
+        ``_reclaimable``, the LRU clock — are NOT serialized; ``from_state``
+        rebuilds them and cross-checks with ``check_invariants``, so a
+        snapshot can never smuggle in drifted refcounts.
+        """
+        order: list[_Node] = [self._root]
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                order.append(child)      # parent always precedes its children
+                stack.append(child)
+        index = {id(n): i for i, n in enumerate(order)}
+        trie = []
+        for n in order:
+            rec = {
+                "parent": index[id(n.parent)] if n.parent is not None else -1,
+                "chunk": None if n.chunk is None else [int(t) for t in n.chunk],
+                "page": None if n.page is None else int(n.page),
+                "stamp": int(n.stamp),
+                "partial": None,
+            }
+            if n.partial is not None:
+                pt = n.partial
+                rec["partial"] = {"tokens": [int(t) for t in pt.tokens],
+                                  "page": int(pt.page),
+                                  "n_rows": int(pt.n_rows),
+                                  "stamp": int(pt.stamp)}
+            trie.append(rec)
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "max_pages_per_seq": self.max_pages_per_seq,
+            "kv_dtype": self.kv_dtype,
+            "page_bytes": self.page_bytes,
+            "free": [int(p) for p in self._free],
+            "tables": [[int(s), [int(p) for p in t]]
+                       for s, t in self._tables.items()],
+            "lengths": [[int(s), int(n)] for s, n in self._lengths.items()],
+            "trie": trie,
+            "counters": {
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefix_lookup_tokens": self.prefix_lookup_tokens,
+                "pages_allocated_total": self.pages_allocated_total,
+                "cow_forks": self.cow_forks,
+                "cache_evictions": self.cache_evictions,
+                "peak_pages": self.peak_pages,
+            },
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PagedKVPool":
+        """Rebuild a pool from ``export_state`` output and verify it: trie,
+        refcounts, reclaimable counter, and LRU clock are reconstructed,
+        then ``check_invariants`` runs before the pool is handed back."""
+        pool = cls(state["n_pages"], state["page_size"],
+                   max_pages_per_seq=state["max_pages_per_seq"],
+                   kv_dtype=state["kv_dtype"], page_bytes=state["page_bytes"])
+        pool._free = [int(p) for p in state["free"]]
+        pool._tables = {int(s): [int(p) for p in t]
+                        for s, t in state["tables"]}
+        pool._lengths = {int(s): int(n) for s, n in state["lengths"]}
+        pool._ref = {}
+        for t in pool._tables.values():
+            for p in t:
+                pool._ref[p] = pool._ref.get(p, 0) + 1
+        max_stamp = -1
+        nodes: list[_Node] = [pool._root]
+        for rec in state["trie"][1:]:
+            parent = nodes[rec["parent"]]
+            node = _Node(chunk=tuple(rec["chunk"]), page=int(rec["page"]),
+                         parent=parent, stamp=int(rec["stamp"]))
+            parent.children[node.chunk] = node
+            pool._cached[node.page] = node
+            max_stamp = max(max_stamp, node.stamp)
+            nodes.append(node)
+        for rec, node in zip(state["trie"], nodes):
+            if rec["partial"] is not None:
+                pt = rec["partial"]
+                node.partial = _Partial(tokens=tuple(pt["tokens"]),
+                                        page=int(pt["page"]),
+                                        n_rows=int(pt["n_rows"]),
+                                        stamp=int(pt["stamp"]))
+                pool._cached[node.partial.page] = node.partial
+                max_stamp = max(max_stamp, node.partial.stamp)
+        pool._reclaimable = sum(1 for p in pool._cached
+                                if pool._ref.get(p, 0) == 0)
+        pool._stamp = itertools.count(max_stamp + 1)
+        c = state["counters"]
+        pool.prefix_hit_tokens = c["prefix_hit_tokens"]
+        pool.prefix_lookup_tokens = c["prefix_lookup_tokens"]
+        pool.pages_allocated_total = c["pages_allocated_total"]
+        pool.cow_forks = c["cow_forks"]
+        pool.cache_evictions = c["cache_evictions"]
+        pool.peak_pages = c["peak_pages"]
+        pool.check_invariants()
+        return pool
+
     # -- invariants --------------------------------------------------------
 
     def check_invariants(self) -> None:

@@ -245,7 +245,12 @@ class MetricsRegistry:
 ENGINE_COUNTER_KEYS = (
     "mixed_steps", "decode_tokens", "prefill_tokens", "tokens_out",
     "preemptions", "prefix_hit_tokens", "cow_forks",
-    "sim_latency_ns", "sim_energy_nj")
+    "sim_latency_ns", "sim_energy_nj",
+    # fault-tolerance lifecycle counters (PR 7): explicit cancels, deadline
+    # expiries, admission-control sheds, degraded (pressure-capped) prefill
+    # chunks, recovered dispatch failures, snapshot/restore events.
+    "aborts", "timeouts", "sheds", "degraded_chunks",
+    "dispatch_failures", "snapshots", "restores")
 
 
 class EngineStats(MutableMapping):
@@ -315,6 +320,22 @@ class EngineStats(MutableMapping):
     @property
     def sim_energy_nj(self) -> float:
         return self._counters["sim_energy_nj"].value
+
+    @property
+    def aborts(self) -> int:
+        return self._counters["aborts"].value
+
+    @property
+    def timeouts(self) -> int:
+        return self._counters["timeouts"].value
+
+    @property
+    def sheds(self) -> int:
+        return self._counters["sheds"].value
+
+    @property
+    def dispatch_failures(self) -> int:
+        return self._counters["dispatch_failures"].value
 
 
 # ---------------------------------------------------------------------------

@@ -61,7 +61,10 @@ class RequestState(enum.Enum):
 class FinishReason(enum.Enum):
     EOS = "eos"
     LENGTH = "length"
-    ABORTED = "aborted"
+    ABORTED = "aborted"    # explicit engine.cancel (client disconnect)
+    TIMEOUT = "timeout"    # deadline_s exceeded (engine deadline sweep)
+    SHED = "shed"          # max_queue_wait_s exceeded while WAITING under
+                           # overload (scheduler admission control)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,9 +73,31 @@ class SamplingParams:
     temperature: float = 0.0          # 0 => greedy
     eos_id: Optional[int] = None
     seed: int = 0
+    # fault-tolerance / SLO knobs (None = unbounded, the legacy behavior):
+    # ``deadline_s`` bounds the request's total wall-clock lifetime from
+    # arrival — the engine's per-step deadline sweep drives an expired
+    # request (queued OR mid-generation) to FINISHED/TIMEOUT and frees its
+    # pages immediately.  ``max_queue_wait_s`` is the admission-control
+    # budget: a WAITING request past it that the scheduler still cannot
+    # admit is SHED (aborted without ever holding pages) so overload
+    # degrades by dropping the stalest queue entries instead of growing
+    # every request's latency without bound.  ``priority`` orders admission
+    # and preemption (higher = admitted earlier, preempted later; ties keep
+    # FIFO order — all-default workloads behave exactly as before).
+    deadline_s: Optional[float] = None
+    max_queue_wait_s: Optional[float] = None
+    priority: int = 0
 
 
 _req_ids = itertools.count()
+
+
+def reserve_req_ids(upto: int) -> None:
+    """Advance the global request-id counter past ``upto`` so requests
+    rebuilt from a snapshot (which keep their original ids) can never
+    collide with ids handed to new requests after a restore."""
+    global _req_ids
+    _req_ids = itertools.count(max(next(_req_ids), upto + 1))
 
 
 @dataclasses.dataclass

@@ -237,6 +237,11 @@ class SchedulerConfig:
     # admissions match the pool's prefix trie: cached tokens are skipped and
     # budgets count only the unique new pages a request actually consumes
     prefix_sharing: bool = True
+    # graceful degradation: when the allocatable-page fraction drops below
+    # this threshold, prefill chunks are capped at one page's worth of
+    # tokens — slower prefill instead of a preemption storm.  0.0 disables
+    # (the default: all-default workloads plan exactly as before).
+    degrade_free_frac: float = 0.0
 
 
 @dataclasses.dataclass
@@ -245,16 +250,21 @@ class StepPlan:
 
     ``spans``: (sequence, n_tokens) for already-admitted sequences, priority
     order — 1 for RUNNING decodes, a chunk for PREFILLING.  ``admissions``:
-    (request, first_chunk) for WAITING requests joining this step (a FIFO
-    prefix of the queue).  ``preemptions``: sequences to evict back to
+    (request, first_chunk) for WAITING requests joining this step (in
+    priority-then-FIFO order).  ``preemptions``: sequences to evict back to
     WAITING *before* executing the spans, lowest priority first; their spans
-    do not appear in ``spans``.
+    do not appear in ``spans``.  ``sheds``: WAITING requests past their
+    ``max_queue_wait_s`` budget that still could not be admitted — the
+    engine aborts them (FINISHED/SHED) instead of queueing them forever.
+    ``degraded`` counts prefill chunks capped by pool-pressure degradation.
     """
 
     spans: list[tuple[Sequence, int]] = dataclasses.field(default_factory=list)
     admissions: list[tuple[Request, int]] = dataclasses.field(
         default_factory=list)
     preemptions: list[Sequence] = dataclasses.field(default_factory=list)
+    sheds: list[Request] = dataclasses.field(default_factory=list)
+    degraded: int = 0
 
     @property
     def n_decodes(self) -> int:
@@ -285,15 +295,51 @@ class IterationScheduler:
     # -- planning ------------------------------------------------------------
 
     def plan_step(self, waiting: Seq[Request], running: Seq[Sequence],
-                  pool: PagedKVPool) -> StepPlan:
-        """Decide this iteration's spans, admissions and preemptions.
+                  pool: PagedKVPool,
+                  now: Optional[float] = None) -> StepPlan:
+        """Decide this iteration's spans, admissions, preemptions and sheds.
+
+        With ``now`` (the engine's clock), admission control runs on top of
+        packing: any WAITING request that the pack could NOT admit and whose
+        queue wait exceeds its ``max_queue_wait_s`` budget is shed — removed
+        from consideration and reported in ``plan.sheds`` — and the step is
+        re-packed without it (shed requests hold no pages, so the repack can
+        only admit more, never less).  ``now=None`` (the legacy signature)
+        disables shedding entirely.
+        """
+        waiting = list(waiting)
+        sheds: list[Request] = []
+        while True:
+            plan = self._plan_once(waiting, running, pool)
+            if now is None:
+                break
+            admitted = {r.req_id for r, _ in plan.admissions}
+            expired = [
+                r for r in waiting
+                if r.req_id not in admitted
+                and r.sampling.max_queue_wait_s is not None
+                and r.t_enqueued >= 0
+                and now - r.t_enqueued > r.sampling.max_queue_wait_s]
+            if not expired:
+                break
+            sheds.extend(expired)
+            drop = {r.req_id for r in expired}
+            waiting = [r for r in waiting if r.req_id not in drop]
+        plan.sheds = sheds
+        return plan
+
+    def _plan_once(self, waiting: Seq[Request], running: Seq[Sequence],
+                   pool: PagedKVPool) -> StepPlan:
+        """One shed-free planning round.
 
         Preemption loop: try to pack with the current residents; if a
         mandatory decode cannot get its next page, or nothing at all can be
         scheduled while work exists, evict the lowest-priority resident
-        (most recent ``admit_order``) and retry with its pages reclaimed.
+        (lowest ``SamplingParams.priority``, most recent ``admit_order``
+        within a class) and retry with its pages reclaimed.
         """
-        order = sorted(running, key=lambda s: s.admit_order)
+        order = sorted(running, key=lambda s: (-s.request.sampling.priority,
+                                               s.admit_order))
         preempted: list[Sequence] = []
         extra_pages = 0
         pending: dict[int, int] = {}   # page -> releases from chosen victims
@@ -333,6 +379,14 @@ class IterationScheduler:
         free = pool.free_pages + extra_pages
         budget = cfg.max_step_tokens
         plan = StepPlan()
+        # graceful degradation: under pool pressure, cap prefill chunks at
+        # one page's worth — shrinking each sequence's footprint growth per
+        # step buys time for decodes to finish and release pages, instead
+        # of letting a full-size chunk trigger a preemption storm
+        pressure = (cfg.degrade_free_frac > 0.0
+                    and free < cfg.degrade_free_frac * (pool.n_pages - 1))
+        cap = min(pool.page_size, cfg.chunk_size) if pressure \
+            else cfg.chunk_size
 
         # 1. mandatory decodes: every RUNNING sequence advances one token
         decodes = [s for s in cand if s.request.state is RequestState.RUNNING]
@@ -354,16 +408,21 @@ class IterationScheduler:
             chunk = self._chunk_for(seq.remaining_prefill, budget, free,
                                     len(seq.page_ids) * pool.page_size
                                     - seq.num_computed, pool.page_size,
-                                    plan, n_dec, avg_ctx)
+                                    plan, n_dec, avg_ctx, cap=cap)
             if chunk <= 0:
                 continue  # stalls this step; pages stay warm
+            if pressure and chunk == cap \
+                    and cap < min(cfg.chunk_size, seq.remaining_prefill):
+                plan.degraded += 1
             need = pool.pages_for(seq.num_computed + chunk) \
                 - len(seq.page_ids)
             free -= need
             budget -= chunk
             plan.spans.append((seq, chunk))
 
-        # 3. FIFO admissions into free slots, first chunk rides this step.
+        # 3. Admissions into free slots, first chunk rides this step, in
+        # priority-then-FIFO order (all-default priorities == plain FIFO;
+        # the sort is stable so ties keep queue order).
         # A prefix-trie hit shrinks the admission to its unmatched tail:
         # shared full pages are refcount bumps (no pages, no tokens), a COW
         # fork draws exactly one page, and only the remaining tokens need a
@@ -373,7 +432,9 @@ class IterationScheduler:
         ps = pool.page_size
         if match_memo is None:
             match_memo = {}
-        for req in waiting:
+        admit_order = sorted(waiting,
+                             key=lambda r: -r.sampling.priority)
+        for req in admit_order:
             if free_slots <= 0:
                 break
             target = len(req.prompt) + len(req.output_tokens)
@@ -397,9 +458,12 @@ class IterationScheduler:
                 break  # the hit itself exceeds the remaining capacity
             chunk = self._chunk_for(target - cached, budget, free - fixed,
                                     slack, ps, plan, n_dec, avg_ctx,
-                                    cached=cached)
+                                    cached=cached, cap=cap)
             if chunk <= 0:
-                break  # strict FIFO: no skip-ahead, no starvation
+                break  # strict in-order: no skip-ahead, no starvation
+            if pressure and chunk == cap \
+                    and cap < min(cfg.chunk_size, target - cached):
+                plan.degraded += 1
             free -= fixed + max(
                 0, math.ceil((cached + chunk) / ps) - n_table)
             budget -= chunk
@@ -412,12 +476,16 @@ class IterationScheduler:
 
     def _chunk_for(self, remaining: int, budget: int, free_pages: int,
                    slack_tokens: int, page_size: int, plan: StepPlan,
-                   n_dec: int, avg_ctx: float, cached: int = 0) -> int:
+                   n_dec: int, avg_ctx: float, cached: int = 0,
+                   cap: Optional[int] = None) -> int:
         """Largest prefill chunk for one sequence under the chunk / step-token
         / page / latency budgets.  ``slack_tokens`` is the headroom already
         covered by the sequence's allocated (or prefix-matched) pages;
-        ``cached`` is the prefix-hit length the cost model prices at ~zero."""
-        chunk = min(self.cfg.chunk_size, remaining, max(budget, 0))
+        ``cached`` is the prefix-hit length the cost model prices at ~zero;
+        ``cap`` (default ``chunk_size``) is the degradation ceiling."""
+        if cap is None:
+            cap = self.cfg.chunk_size
+        chunk = min(cap, remaining, max(budget, 0))
         # shrink to the pages actually available
         chunk = min(chunk, slack_tokens + free_pages * page_size)
         if chunk <= 0:

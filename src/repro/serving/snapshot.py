@@ -1,0 +1,273 @@
+"""Engine snapshot/restore: rolling restarts for the serving engine.
+
+``snapshot_engine`` freezes a ``ContinuousBatchingEngine`` into one dict —
+after draining the in-flight dispatch chain, so the one-step harvest lag
+never leaves a sampled token stranded on the device — and
+``restore_engine`` rebuilds a live engine from it.  Persistence goes
+through ``checkpoint/store.py`` (atomic rename, per-leaf CRC32): device
+arrays as checkpoint leaves, all host bookkeeping in the manifest's
+``extra`` dict (JSON).
+
+Recovery contract (what survives, what is recomputed, what is checked):
+
+  * **Survives exactly** (full snapshot, ``include_kv=True``): request
+    queues and order, emitted tokens, prefill cursors
+    (``num_computed_tokens`` / ``num_cached_tokens``), per-sequence page
+    tables, the prefix trie (structure, partial tails, LRU stamps), the
+    device KV pages + quantization scales, per-slot sampling state (device
+    token, temperature, PRNG streams, COW fork points).  Greedy AND
+    sampled continuations are token-identical to an uninterrupted run.
+  * **Recomputed on resume** (degraded restore, ``include_kv=False`` or a
+    host-only snapshot): every unfinished request returns to WAITING with
+    its cursor reset — the PR 3 preemption contract — keeping emitted
+    tokens and the PRNG ``resume_key`` captured at snapshot time, so
+    outputs are still token-identical; only the KV recompute work is paid
+    again.
+  * **Restarts**: wall-clock lifecycle stamps.  ``deadline_s`` /
+    ``max_queue_wait_s`` budgets are measured from the restore, not the
+    original arrival (the original clock died with the process), and the
+    metrics registry starts fresh (``stats["restores"]`` records the
+    event).
+  * **Checked on restore**: ``PagedKVPool.from_state`` re-derives
+    refcounts from the page tables and runs ``check_invariants`` (a
+    snapshot cannot smuggle in drifted refcounts), and
+    ``faults.assert_recovery_invariants`` cross-checks engine-vs-pool
+    state (no leaked reservations, exact slot accounting) before the
+    engine is handed back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import (read_manifest, restore_checkpoint,
+                                    save_checkpoint)
+from repro.models import transformer as T
+from repro.serving.faults import assert_recovery_invariants
+from repro.serving.kv_pool import PagedKVPool, SINK_PAGE
+from repro.serving.request import (FinishReason, Request, RequestState,
+                                   SamplingParams, Sequence, reserve_req_ids)
+
+SNAPSHOT_VERSION = 1
+
+
+def _ser_request(req: Request, resume_key) -> dict:
+    return {
+        "req_id": int(req.req_id),
+        "prompt": [int(t) for t in req.prompt],
+        "output_tokens": [int(t) for t in req.output_tokens],
+        "sampling": dataclasses.asdict(req.sampling),
+        "state": req.state.name,
+        "num_computed_tokens": int(req.num_computed_tokens),
+        "num_cached_tokens": int(req.num_cached_tokens),
+        "num_preemptions": int(req.num_preemptions),
+        "resume_key": (None if resume_key is None
+                       else [int(x) for x in np.asarray(resume_key,
+                                                        np.uint32).reshape(-1)]),
+        "arrived_step": int(req.arrived_step),
+        "admitted_step": int(req.admitted_step),
+        "finish_reason": (None if req.finish_reason is None
+                          else req.finish_reason.value),
+    }
+
+
+def snapshot_engine(engine, include_kv: bool = True) -> dict:
+    """Freeze the engine's complete serving state (see module docstring).
+    Drains the dispatch chain first; requests the drain finishes surface
+    through the engine's next ``step()``."""
+    engine._overflow.extend(engine.drain())
+    keys_host = np.asarray(jax.device_get(engine._keys))
+    requests = []
+    # finished-but-unreported requests (cancel()/drain completions waiting
+    # in _overflow for the next step) are part of the serving state: a
+    # crash between finish and report must not lose the completion
+    for req in engine._overflow:
+        requests.append(_ser_request(req, req.resume_key))
+    for req in engine.waiting:
+        requests.append(_ser_request(req, req.resume_key))
+    running = []
+    for slot, seq in sorted(engine.running.items()):
+        # the per-slot PRNG stream IS the request's resume key: a degraded
+        # restore re-admits through the preemption path and continues the
+        # exact sampled stream
+        requests.append(_ser_request(seq.request, keys_host[slot]))
+        running.append({
+            "req_id": int(seq.req_id),
+            "slot": int(slot),
+            "page_ids": [int(p) for p in seq.page_ids],
+            "prefill_target": int(seq.prefill_target),
+            "admit_order": int(seq.admit_order),
+        })
+    snap = {
+        "version": SNAPSHOT_VERSION,
+        "step_idx": int(engine.step_idx),
+        "include_kv": bool(include_kv),
+        "config": {
+            "model": engine.cfg.name,
+            "max_slots": int(engine.max_slots),
+            "page_size": int(engine.page_size),
+            "max_len": int(engine.max_len),
+            "n_pages": int(engine.pool_host.n_pages),
+            "kv_dtype": engine.kv_dtype,
+            "prefix_sharing": bool(engine.prefix_sharing),
+            "chunk_size": int(engine.scheduler.cfg.chunk_size),
+        },
+        "requests": requests,
+        "waiting": [int(r.req_id) for r in engine.waiting],
+        "running": running,
+        "overflow": [int(r.req_id) for r in engine._overflow],
+    }
+    if include_kv:
+        snap["pool_host"] = engine.pool_host.export_state()
+        snap["device"] = jax.device_get({
+            "kv": engine.pool,
+            "tok": engine._tok,
+            "keys": engine._keys,
+            "temp": engine._temp,
+            "wstart": engine._wstart,
+        })
+    engine.stats["snapshots"] += 1
+    return snap
+
+
+def restore_engine(snap: dict, cfg, params, **engine_kw):
+    """Rebuild a live engine from a ``snapshot_engine`` dict.
+
+    A full snapshot (``include_kv`` and a ``device`` section) restores
+    page tables, trie, KV pages and slot state exactly; otherwise every
+    unfinished request re-enters WAITING and recomputes on resume.  Extra
+    ``engine_kw`` (cost_model, metrics, fault_injector, ...) pass through
+    to the constructor; geometry kwargs come from the snapshot and must
+    not be overridden."""
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    c = snap["config"]
+    if cfg.name != c["model"]:
+        raise ValueError(
+            f"snapshot is for model {c['model']!r}, got {cfg.name!r}")
+    for k in ("max_slots", "page_size", "max_len", "n_pages", "kv_dtype",
+              "prefix_sharing", "chunk_size"):
+        if k in engine_kw:
+            raise ValueError(f"{k} is fixed by the snapshot")
+    eng = ContinuousBatchingEngine(
+        cfg, params, max_slots=c["max_slots"], page_size=c["page_size"],
+        max_len=c["max_len"], n_pages=c["n_pages"], kv_dtype=c["kv_dtype"],
+        prefix_sharing=c["prefix_sharing"], chunk_size=c["chunk_size"],
+        **engine_kw)
+    now = eng._clock()
+
+    reqs: dict[int, Request] = {}
+    max_id = -1
+    for r in snap["requests"]:
+        req = Request(prompt=list(r["prompt"]),
+                      sampling=SamplingParams(**r["sampling"]),
+                      req_id=int(r["req_id"]))
+        req.output_tokens = list(r["output_tokens"])
+        req.num_computed_tokens = r["num_computed_tokens"]
+        req.num_cached_tokens = r["num_cached_tokens"]
+        req.num_preemptions = r["num_preemptions"]
+        if r["resume_key"] is not None:
+            req.resume_key = np.asarray(r["resume_key"], np.uint32)
+        req.arrived_step = r["arrived_step"]
+        req.admitted_step = r["admitted_step"]
+        req.state = RequestState[r["state"]]
+        if r.get("finish_reason") is not None:
+            req.finish_reason = FinishReason(r["finish_reason"])
+        # lifecycle clocks restart at restore: the original process's
+        # monotonic clock died with it, so deadlines and queue-wait budgets
+        # are measured from here (see module docstring)
+        req.t_arrival = req.t_enqueued = req.mark("restored", now)
+        reqs[req.req_id] = req
+        max_id = max(max_id, req.req_id)
+    if max_id >= 0:
+        reserve_req_ids(max_id)
+
+    full = snap.get("include_kv") and snap.get("device") is not None
+    if full:
+        eng.pool_host = PagedKVPool.from_state(snap["pool_host"])
+        dev = snap["device"]
+        eng.pool = jax.tree_util.tree_map(jnp.asarray, dev["kv"])
+        eng._tok = jnp.asarray(np.asarray(dev["tok"], np.int32))
+        eng._keys = jnp.asarray(np.asarray(dev["keys"], np.uint32))
+        eng._temp = jnp.asarray(np.asarray(dev["temp"], np.float32))
+        eng._wstart = jnp.asarray(np.asarray(dev["wstart"], np.int32))
+        pt = np.full((eng.max_slots, eng.max_pages_per_seq), SINK_PAGE,
+                     np.int32)
+        max_order = -1
+        for rec in snap["running"]:
+            req = reqs[rec["req_id"]]
+            seq = Sequence(request=req, slot=rec["slot"],
+                           page_ids=[int(p) for p in rec["page_ids"]],
+                           prefill_target=rec["prefill_target"],
+                           admit_order=rec["admit_order"], t_admitted=now)
+            eng.running[seq.slot] = seq
+            pt[seq.slot, :len(seq.page_ids)] = seq.page_ids
+            max_order = max(max_order, seq.admit_order)
+        eng._pt = jnp.asarray(pt)
+        eng._free_slots = [s for s in range(eng.max_slots - 1, -1, -1)
+                           if s not in eng.running]
+        import itertools
+        eng._admit_stamp = itertools.count(max_order + 1)
+        for rid in snap["waiting"]:
+            eng.waiting.append(reqs[rid])
+    else:
+        # degraded restore: no KV — every unfinished request re-enters
+        # WAITING through the preemption contract (cursor reset, emitted
+        # tokens + PRNG stream kept), residents first in admission order
+        order = sorted(snap["running"], key=lambda r: r["admit_order"])
+        resident = [reqs[r["req_id"]] for r in order]
+        queued = [reqs[rid] for rid in snap["waiting"]]
+        for req in resident + queued:
+            req.state = RequestState.WAITING
+            req.num_computed_tokens = 0
+            req.num_cached_tokens = 0
+            eng.waiting.append(req)
+
+    # finished-but-unreported completions surface through the restored
+    # engine's first step(), exactly as they would have pre-crash
+    eng._overflow.extend(reqs[rid] for rid in snap.get("overflow", ()))
+    eng.step_idx = snap["step_idx"]
+    eng.stats["restores"] += 1
+    assert_recovery_invariants(eng)
+    return eng
+
+
+def save_snapshot(directory, snap: dict, keep_last: int = 3):
+    """Persist a snapshot through the checkpoint store: device arrays as
+    CRC-checked leaves, everything else in the manifest's ``extra``."""
+    state = snap.get("device") or {}
+    extra = {k: v for k, v in snap.items() if k != "device"}
+    return save_checkpoint(directory, snap["step_idx"], state,
+                           keep_last=keep_last, extra=extra)
+
+
+def load_snapshot(directory, cfg, step: Optional[int] = None) -> dict:
+    """Load a persisted snapshot back into ``restore_engine`` form.  The
+    manifest's host state describes the device-tree geometry, so the
+    ``like`` template for the leaf restore is built from it (and CRC32
+    verification runs on every leaf)."""
+    manifest = read_manifest(directory, step)
+    snap = dict(manifest["extra"])
+    if snap.get("include_kv"):
+        c = snap["config"]
+        S = c["max_slots"]
+        like = {
+            "kv": T.init_paged_pool(cfg, c["n_pages"], c["page_size"],
+                                    kv_dtype=c["kv_dtype"]),
+            "tok": np.zeros((S,), np.int32),
+            "keys": np.zeros((S, 2), np.uint32),
+            "temp": np.zeros((S,), np.float32),
+            "wstart": np.zeros((S,), np.int32),
+        }
+        state, _ = restore_checkpoint(directory, manifest["step"], like)
+        snap["device"] = state
+    return snap
+
+
+__all__ = ["snapshot_engine", "restore_engine", "save_snapshot",
+           "load_snapshot", "SNAPSHOT_VERSION"]

@@ -1,0 +1,317 @@
+"""Snapshot/restore tests: pool state export round-trips (shared pages, COW
+forks, partial trie tails, recomputed refcounts), engine snapshots taken
+mid-prefill and mid-decode (with a pending lagged harvest) restore to
+token-identical greedy AND sampled continuations, degraded (no-KV) restores
+fall back to recompute-on-resume with identical outputs, the on-disk round
+trip goes through the CRC-checked checkpoint store, and the
+``EngineSupervisor`` recovers a missed-heartbeat engine from its last
+published snapshot."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import (ContinuousBatchingEngine, FinishReason,
+                           PagedKVPool, SamplingParams,
+                           assert_recovery_invariants)
+from repro.serving.request import reserve_req_ids
+from repro.serving.snapshot import (load_snapshot, restore_engine,
+                                    save_snapshot, snapshot_engine)
+from repro.ft.coordinator import EngineSupervisor
+
+CFG = ModelConfig(name="t", d_model=64, n_layers=2, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab=256, dtype="float32")
+
+PROMPTS = [list(range(5, 15)), list(range(30, 38)), [7, 9, 11]]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _engine(params, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_len", 128)
+    return ContinuousBatchingEngine(CFG, params, **kw)
+
+
+def _run_collect(eng):
+    return {r.req_id: r for r in eng.run()}
+
+
+def _reference(params, sampling_fn):
+    eng = _engine(params)
+    reqs = [eng.add_request(p, sampling_fn(i)) for i, p in enumerate(PROMPTS)]
+    eng.run()
+    return [list(r.output_tokens) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# pool export / from_state
+# ---------------------------------------------------------------------------
+
+
+def test_pool_state_roundtrip_plain():
+    pool = PagedKVPool(n_pages=9, page_size=4)
+    pool.allocate(1, 10)
+    pool.allocate(2, 4)
+    pool.free(2)
+    clone = PagedKVPool.from_state(pool.export_state())
+    clone.check_invariants()
+    assert clone.page_table(1) == pool.page_table(1)
+    assert clone.free_pages == pool.free_pages
+    assert sorted(clone._free) == sorted(pool._free)
+
+
+def test_pool_state_roundtrip_shared_trie_and_partials():
+    """Shared full pages, a partial tail, and a COW fork all survive the
+    export: refcounts are recomputed from tables+trie, not trusted."""
+    pool = PagedKVPool(n_pages=17, page_size=4)
+    toks = list(range(100, 110))            # 2.5 pages
+    pool.acquire_prefix(1, toks)            # empty trie: no pages yet
+    pool.extend(1, 10)                      # draw the 3 pages
+    pool.advance(1, 10)
+    pool.commit_prefix(1, toks, 10)         # 2 full pages + partial tail
+    pool.acquire_prefix(2, toks)            # shares the full pages, forks
+    pool.free(1)                            # trie keeps the committed pages
+    state = pool.export_state()
+    clone = PagedKVPool.from_state(state)
+    clone.check_invariants()
+    assert clone.page_table(2) == pool.page_table(2)
+    assert clone.free_pages == pool.free_pages
+    # the trie still matches for a third sequence, exactly as before
+    m_old = pool.match_prefix(toks)
+    m_new = clone.match_prefix(toks)
+    assert (m_new.n_tokens, m_new.pages, m_new.cow) == \
+        (m_old.n_tokens, m_old.pages, m_old.cow)
+    # counters carry over
+    assert clone.prefix_hit_tokens == pool.prefix_hit_tokens
+    assert clone.cow_forks == pool.cow_forks
+
+
+def test_pool_state_is_json_safe():
+    import json
+
+    pool = PagedKVPool(n_pages=9, page_size=4)
+    pool.acquire_prefix(5, list(range(9)))
+    pool.extend(5, 9)
+    pool.advance(5, 9)
+    pool.commit_prefix(5, list(range(9)), 9)
+    s = json.dumps(pool.export_state())
+    clone = PagedKVPool.from_state(json.loads(s))
+    clone.check_invariants()
+    assert clone.page_table(5) == pool.page_table(5)
+
+
+# ---------------------------------------------------------------------------
+# engine snapshot / restore (in memory)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("steps", [1, 3, 6])
+def test_full_restore_token_identical_greedy(params, steps):
+    """Snapshots taken mid-prefill (1 step), mid-decode (3+) — all restore
+    to the exact greedy streams, including the pending lagged harvest."""
+    ref = _reference(params, lambda i: SamplingParams(max_new_tokens=8))
+    eng = _engine(params)
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=8))
+            for p in PROMPTS]
+    for _ in range(steps):
+        eng.step()
+    snap = eng.snapshot()
+    assert eng.stats["snapshots"] == 1
+    restored = ContinuousBatchingEngine.restore(snap, CFG, params)
+    assert restored.stats["restores"] == 1
+    fin = _run_collect(restored)
+    outs = [list(fin[r.req_id].output_tokens) for r in reqs]
+    assert outs == ref
+    assert_recovery_invariants(restored)
+
+
+def test_full_restore_token_identical_sampled(params):
+    """Sampled runs restore exactly too: per-slot PRNG streams are part of
+    the snapshot."""
+    mk = lambda i: SamplingParams(max_new_tokens=8, temperature=0.8, seed=i)
+    ref = _reference(params, mk)
+    eng = _engine(params)
+    reqs = [eng.add_request(p, mk(i)) for i, p in enumerate(PROMPTS)]
+    eng.step(); eng.step(); eng.step()
+    restored = ContinuousBatchingEngine.restore(eng.snapshot(), CFG, params)
+    fin = _run_collect(restored)
+    assert [list(fin[r.req_id].output_tokens) for r in reqs] == ref
+
+
+def test_degraded_restore_recomputes_token_identical(params):
+    """No-KV snapshot: everyone re-enters WAITING and recomputes — same
+    tokens, for greedy and sampled requests alike."""
+    mk = lambda i: SamplingParams(max_new_tokens=8,
+                                  temperature=0.5 if i == 1 else 0.0, seed=i)
+    ref = _reference(params, mk)
+    eng = _engine(params)
+    reqs = [eng.add_request(p, mk(i)) for i, p in enumerate(PROMPTS)]
+    eng.step(); eng.step()
+    snap = eng.snapshot(include_kv=False)
+    assert "device" not in snap and "pool_host" not in snap
+    restored = ContinuousBatchingEngine.restore(snap, CFG, params)
+    assert not restored.running and restored.waiting   # all re-queued
+    fin = _run_collect(restored)
+    assert [list(fin[r.req_id].output_tokens) for r in reqs] == ref
+
+
+def test_snapshot_preserves_shared_cow_pages(params):
+    """Requests sharing a prefix (COW forks live) snapshot and restore with
+    the sharing intact — pool invariants recomputed, outputs exact."""
+    sysp = list(range(50, 70))   # 2.5 pages at page_size 8
+    prompts = [sysp + [100 + i] for i in range(3)]
+
+    def warmed(params):
+        # a completed warm-up over the shared prefix commits it to the
+        # trie, so the burst admissions hit it and COW-fork the partial
+        eng = _engine(params)
+        eng.add_request(list(sysp), SamplingParams(max_new_tokens=2))
+        eng.run()
+        return eng
+
+    ref_eng = warmed(params)
+    ref_reqs = [ref_eng.add_request(p, SamplingParams(max_new_tokens=6))
+                for p in prompts]
+    ref_eng.run()
+    ref = [list(r.output_tokens) for r in ref_reqs]
+
+    eng = warmed(params)
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=6))
+            for p in prompts]
+    eng.step(); eng.step(); eng.step()
+    snap = eng.snapshot()
+    assert snap["pool_host"]["counters"]["cow_forks"] >= 1 or \
+        eng.pool_host.cow_forks >= 1
+    restored = ContinuousBatchingEngine.restore(snap, CFG, params)
+    fin = _run_collect(restored)
+    assert [list(fin[r.req_id].output_tokens) for r in reqs] == ref
+
+
+def test_snapshot_preserves_unreported_completions(params):
+    """A request finished by the snapshot's own drain (sitting in overflow,
+    unreported) must come back from the restore and surface exactly once."""
+    eng = _engine(params)
+    short = eng.add_request(PROMPTS[2], SamplingParams(max_new_tokens=1))
+    long = eng.add_request(PROMPTS[0], SamplingParams(max_new_tokens=8))
+    eng.step()   # dispatches short's finishing step (harvest lagged)
+    snap = eng.snapshot()   # drain finishes short -> overflow -> snapshot
+    assert short.req_id in snap["overflow"]
+    restored = ContinuousBatchingEngine.restore(snap, CFG, params)
+    fin = _run_collect(restored)
+    assert fin[short.req_id].finish_reason is FinishReason.LENGTH
+    assert list(fin[short.req_id].output_tokens) == \
+        list(short.output_tokens)
+    assert long.req_id in fin
+
+
+def test_restore_validates_model_and_geometry(params):
+    eng = _engine(params)
+    eng.add_request(PROMPTS[0], SamplingParams(max_new_tokens=4))
+    snap = eng.snapshot()
+    wrong = dataclasses.replace(CFG, name="other")
+    with pytest.raises(ValueError, match="model"):
+        restore_engine(snap, wrong, params)
+    with pytest.raises(ValueError, match="fixed by the snapshot"):
+        restore_engine(snap, CFG, params, max_slots=2)
+
+
+def test_reserve_req_ids_prevents_collisions(params):
+    eng = _engine(params)
+    req = eng.add_request(PROMPTS[0], SamplingParams(max_new_tokens=4))
+    restored = ContinuousBatchingEngine.restore(eng.snapshot(), CFG, params)
+    fresh = restored.add_request(PROMPTS[1], SamplingParams(max_new_tokens=2))
+    assert fresh.req_id > req.req_id
+    reserve_req_ids(10_000)
+    another = restored.add_request(PROMPTS[2],
+                                   SamplingParams(max_new_tokens=2))
+    assert another.req_id > 10_000
+
+
+# ---------------------------------------------------------------------------
+# on-disk round trip
+# ---------------------------------------------------------------------------
+
+
+def test_save_restore_latest_roundtrip(params, tmp_path):
+    ref = _reference(params, lambda i: SamplingParams(max_new_tokens=8))
+    eng = _engine(params)
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=8))
+            for p in PROMPTS]
+    eng.step(); eng.step()
+    eng.save_snapshot(tmp_path)
+    eng.step(); eng.step()
+    eng.save_snapshot(tmp_path)   # newer snapshot wins
+    restored = ContinuousBatchingEngine.restore_latest(tmp_path, CFG, params)
+    assert restored.step_idx == 4
+    fin = _run_collect(restored)
+    assert [list(fin[r.req_id].output_tokens) for r in reqs] == ref
+
+
+def test_on_disk_corruption_detected(params, tmp_path):
+    eng = _engine(params)
+    eng.add_request(PROMPTS[0], SamplingParams(max_new_tokens=4))
+    eng.step()
+    eng.save_snapshot(tmp_path)
+    # flip bytes in one KV leaf: the CRC check must refuse the restore
+    victim = next(p for p in (tmp_path / "step_00000001").glob("kv__*.npy"))
+    raw = bytearray(victim.read_bytes())
+    raw[-8] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="crc"):
+        load_snapshot(tmp_path, CFG)
+
+
+def test_host_only_snapshot_on_disk(params, tmp_path):
+    eng = _engine(params)
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=8))
+            for p in PROMPTS]
+    eng.step()
+    save_snapshot(tmp_path, eng.snapshot(include_kv=False))
+    snap = load_snapshot(tmp_path, CFG)
+    assert "device" not in snap
+    restored = restore_engine(snap, CFG, params)
+    fin = _run_collect(restored)
+    ref = _reference(params, lambda i: SamplingParams(max_new_tokens=8))
+    assert [list(fin[r.req_id].output_tokens) for r in reqs] == ref
+
+
+# ---------------------------------------------------------------------------
+# supervisor: missed heartbeat -> restart-recoverable
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_detects_and_recovers(params):
+    sup = EngineSupervisor(timeout_s=10.0)
+    eng = _engine(params)
+    sup.attach(eng)
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=8))
+            for p in PROMPTS]
+    eng.step(); eng.step()
+    sup.publish(eng.snapshot())
+    last_beat = sup.heartbeat._last[sup.rank]
+    assert not sup.engine_failed(now=last_beat + 5.0)
+    assert sup.engine_failed(now=last_beat + 11.0)   # engine went quiet
+    recovered = sup.recover(CFG, params)
+    # heartbeat re-attached: the recovered engine reports liveness again
+    recovered.step()
+    assert not sup.engine_failed(now=sup.heartbeat._last[sup.rank])
+    fin = {r.req_id: r for r in recovered.run()}
+    ref = _reference(params, lambda i: SamplingParams(max_new_tokens=8))
+    assert [list(fin[r.req_id].output_tokens) for r in reqs] == ref
+    assert_recovery_invariants(recovered)
+
+
+def test_supervisor_without_snapshot_raises(params):
+    sup = EngineSupervisor()
+    with pytest.raises(RuntimeError, match="no snapshot"):
+        sup.recover(CFG, params)
