@@ -87,9 +87,16 @@ Emits BENCH_serving.json:
                   "faults": [{"fault": "pool_exhaustion", "fired": 1,
                               "survivors": ..., "agreement": 1.0,
                               "restores": 0, "leaked_pages": 0}, ...]},
+   "tp": [{"tp": 8, "kv_shard": 8, "agreement_vs_tp1": 1.0,
+           "allreduce_bytes_per_token": ...,
+           "hbm_shard_bytes": {"weight_bytes": ..., "kv_bytes": ...,
+                               "weight_kv_bytes": ..., "allreduce_bytes": ...},
+           "cim_shard_bytes": {...}, "calibration": {...}, ...}, ...],
    "outputs_match": true}
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
+      (--tp-only + XLA_FLAGS=--xla_force_host_platform_device_count=8 runs
+      just the tensor-parallel sweep and merges the `tp` section into --out)
 """
 
 from __future__ import annotations
@@ -110,6 +117,12 @@ from repro.serving.request import SamplingParams
 
 CFG = ModelConfig(name="bench", d_model=128, n_layers=2, n_heads=4,
                   n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
+
+# tp sweep config: every parallel dim (heads, kv_heads, d_ff blocks, vocab)
+# divides 8, so tp=8 shards the weights AND the KV pool (CFG's 2 KV heads
+# would leave the pool replicated past tp=2)
+TP_CFG = ModelConfig(name="bench_tp", d_model=128, n_layers=2, n_heads=8,
+                     n_kv_heads=8, d_ff=256, vocab=512, dtype="float32")
 
 _COST_MODELS: dict = {}
 
@@ -576,6 +589,116 @@ def run_telemetry(params, *, cost_models, prompt_len, new_tokens,
     return out
 
 
+def run_tp_sweep(*, tps=(1, 2, 4, 8), prompt_len=24, new_tokens=8,
+                 n_requests=8, max_slots=8):
+    """Part 7: tensor-parallel serving over a ("data", "model") host mesh.
+
+    One engine per tp, same greedy request set: tp=1 (mesh=None, the
+    baseline single-device path) anchors token agreement; every tp>1 cell
+    runs the mesh-sharded mixed step (weights by the sharding/params.py
+    suffix rules, KV pool split on its head axis by DeviceKV) and must
+    reproduce the tp=1 tokens.  Each row reports both cost models'
+    per-shard decode bytes/token (weights /tp, KV /kv_shard, the
+    all-reduce term priced on the reduction bus) and the tp-priced HBM
+    model's calibration fit from the per-step-synced run, so the
+    acceptance numbers — >=95% agreement, strictly fewer per-shard
+    weight+KV bytes at tp=8 vs tp=1 — live in BENCH_serving.json's ``tp``
+    section.  CI provides the devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; tps the
+    visible device count cannot host are skipped (and logged)."""
+    from repro.launch.mesh import make_host_mesh
+
+    n_dev = len(jax.devices())
+    params = T.init_params(jax.random.PRNGKey(42), TP_CFG)
+    max_len = prompt_len + new_tokens + 8
+    avg_ctx = prompt_len + new_tokens / 2.0
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(900 + i), (prompt_len,), 0, TP_CFG.vocab))
+        for i in range(n_requests)]
+
+    def run(mesh, cost):
+        eng = ContinuousBatchingEngine(
+            TP_CFG, params, max_slots=max_slots, page_size=8,
+            max_len=max_len, chunk_size=16, cost_model=cost, mesh=mesh)
+        reqs = [eng.add_request(p, SamplingParams(
+            max_new_tokens=new_tokens, temperature=0.0)) for p in prompts]
+        t0 = time.perf_counter()
+        while eng.has_work():
+            eng.step()
+            jax.block_until_ready(eng._tok)   # honest calibration pairs
+        wall = time.perf_counter() - t0
+        eng.pool_host.check_invariants()
+        eng.kv.check_shards()
+        outs = np.zeros((len(reqs), new_tokens), np.int32)
+        for i, r in enumerate(reqs):
+            outs[i, :len(r.output_tokens)] = r.output_tokens
+        return eng, outs, wall
+
+    rows, base = [], None
+    for tp in tps:
+        if tp > n_dev or n_dev % tp:
+            print(f"  [tp={tp}] skipped: needs {tp} of {n_dev} visible "
+                  f"devices (XLA_FLAGS=--xla_force_host_platform_"
+                  f"device_count=8)")
+            continue
+        mesh = None if tp == 1 else make_host_mesh(model=tp)
+        hbm = HBMCostModel.from_model_config(TP_CFG, kv_dtype="fp32", tp=tp)
+        cim = CIMCostModel(TP_CFG, strategy="sparse", seq_len=prompt_len,
+                           tp=tp)
+        run(mesh, hbm)                       # warm: jit compiles per mesh
+        eng, outs, wall = run(mesh, hbm)
+        if base is None:
+            base = outs
+        agree = float(np.mean(outs == base))
+        cal = eng.calibration.report()
+        row = {
+            "tp": tp,
+            "kv_shard": eng.kv.kv_shard,
+            "n_pages": eng.pool_host.n_pages,
+            "tok_s": eng.stats["tokens_out"] / wall,
+            "agreement_vs_tp1": agree,
+            "allreduce_bytes_per_token": hbm.allreduce_bytes_per_token,
+            "hbm_shard_bytes": hbm.shard_decode_bytes_per_token(
+                avg_ctx, n_seqs=max_slots),
+            "cim_shard_bytes": cim.shard_decode_bytes_per_token(
+                avg_ctx, n_seqs=max_slots),
+            "calibration": cal,
+        }
+        rows.append(row)
+        print(f"  [tp={tp}] kv_shard={row['kv_shard']} "
+              f"agreement={agree:.1%} "
+              f"hbm weight+kv/shard={row['hbm_shard_bytes']['weight_kv_bytes']:.0f}B "
+              f"cim weight+kv/shard={row['cim_shard_bytes']['weight_kv_bytes']:.0f}B "
+              f"allreduce={row['allreduce_bytes_per_token']:.0f}B/tok")
+    return rows
+
+
+def assert_tp_acceptance(rows):
+    """Acceptance for the ``tp`` section (only binding when the sweep ran
+    more than the tp=1 anchor, i.e. under the forced-device CI job):
+    >=95% greedy agreement everywhere, and at the widest tp both cost
+    models report strictly fewer per-shard weight+KV bytes/token than
+    tp=1, with the all-reduce term priced."""
+    if len(rows) < 2:
+        return
+    base = rows[0]
+    assert base["tp"] == 1, rows
+    for r in rows[1:]:
+        assert r["agreement_vs_tp1"] >= 0.95, r
+        assert r["allreduce_bytes_per_token"] > 0, r
+        assert r["calibration"]["n"] > 0, r
+        assert math.isfinite(r["calibration"]["scale"]), r
+    widest = rows[-1]
+    for cm in ("hbm_shard_bytes", "cim_shard_bytes"):
+        assert widest[cm]["weight_kv_bytes"] < base[cm]["weight_kv_bytes"], \
+            (cm, widest, base)
+    print(f"tp sweep: {len(rows)} cells, widest tp={widest['tp']} "
+          f"(kv_shard={widest['kv_shard']}), all >=95% greedy agreement; "
+          f"per-shard weight+KV bytes/token "
+          f"{rows[0]['hbm_shard_bytes']['weight_kv_bytes']:.0f} -> "
+          f"{widest['hbm_shard_bytes']['weight_kv_bytes']:.0f} (hbm)")
+
+
 def run_robustness(params, *, prompt_len, new_tokens, n_requests, max_slots,
                    chunk=8, seed=0):
     """Part 6: fault-tolerance sweep — overload shedding + per-fault
@@ -780,7 +903,27 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="also save the telemetry pass's Chrome trace JSON "
                          "(loadable at ui.perfetto.dev)")
+    ap.add_argument("--tp-only", action="store_true",
+                    help="run ONLY the tensor-parallel sweep and merge its "
+                         "`tp` section into --out (the CI tp job runs this "
+                         "under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8)")
     args = ap.parse_args()
+
+    if args.tp_only:
+        print("tp sweep:")
+        tp_rows = run_tp_sweep(new_tokens=min(args.new_tokens, 8))
+        try:
+            with open(args.out) as f:
+                payload = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            payload = {"bench": "serving_throughput"}
+        payload["tp"] = tp_rows
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out} (tp section, {len(tp_rows)} cells)")
+        assert_tp_acceptance(tp_rows)
+        return
 
     params = T.init_params(jax.random.PRNGKey(0), CFG)
     if args.smoke:
@@ -811,6 +954,9 @@ def main():
         robustness = run_robustness(
             params, prompt_len=24, new_tokens=new_tokens, n_requests=4,
             max_slots=2, chunk=8)
+        print("tp sweep (smoke):")
+        tp_rows = run_tp_sweep(n_requests=4, max_slots=2,
+                               new_tokens=new_tokens)
     else:
         results, m1 = run_throughput(params, (1, 2, 4, 8), prompt_len=16,
                                      new_tokens=args.new_tokens)
@@ -836,11 +982,14 @@ def main():
         robustness = run_robustness(
             params, prompt_len=48, new_tokens=args.new_tokens, n_requests=6,
             max_slots=4, chunk=16)
+        print("tp sweep:")
+        tp_rows = run_tp_sweep(new_tokens=min(args.new_tokens, 8))
     all_match = m1 and m2 and m3
     payload = {"bench": "serving_throughput", "smoke": args.smoke,
                "results": results, "chunked": chunked, "prefix": prefix,
                "kv_quant": kv_quant, "telemetry": telemetry,
-               "robustness": robustness, "outputs_match": all_match}
+               "robustness": robustness, "tp": tp_rows,
+               "outputs_match": all_match}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
@@ -908,6 +1057,9 @@ def main():
           f"(100% survivor agreement, 0 leaked pages); burst p99 TTFT "
           f"{b['shed_off']['ttft_p99_ms']:.1f} -> "
           f"{b['shed_on']['ttft_p99_ms']:.1f} ms with shedding")
+    # acceptance (tp): binds only when >1 tp cell ran (the forced-device
+    # CI tp job); the single-device tier-1 job records the tp=1 anchor
+    assert_tp_acceptance(tp_rows)
     at8 = [r for r in results if r["concurrency"] == 8]
     if at8:
         print(f"speedup at 8 concurrent: {at8[0]['speedup']:.2f}x")

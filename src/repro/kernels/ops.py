@@ -98,7 +98,7 @@ def bdmm_mm(x: jax.Array, w: jax.Array) -> jax.Array:
 @functools.lru_cache(maxsize=None)
 def paged_span_fits(span: int, n_heads: int, head_dim: int,
                     page_size: int, n_kv_heads: int, kv_bytes: float,
-                    scale_bytes: int = 0) -> bool:
+                    scale_bytes: int = 0, n_shards: int = 1) -> bool:
     """Does one grid step of the paged-attention span kernel fit VMEM?
 
     Sums ONE grid step's working set against the same budget the Monarch
@@ -108,17 +108,22 @@ def paged_span_fits(span: int, n_heads: int, head_dim: int,
     the quantized path (``scale_bytes`` > 0 flags it — the kernel
     materializes fp32 copies of both pages next to the pinned int8
     blocks), the fp32 flash scratch (running max / normalizer /
-    accumulator) and the output block.  Cached per shape because
-    ``_paged_attend`` consults it per layer per engine step.  (Interpret
-    mode stays the paged kernel's own decision — ``kernels.paged``
-    resolves it per backend.)"""
+    accumulator) and the output block.  ``n_shards`` is the KV-head split
+    of a tensor-parallel pool: each shard's grid step gathers only its
+    local ``n_kv_heads / n_shards`` page slice (and that slice's scale
+    rows / dequant temporaries), so the KV-side terms divide.  Cached per
+    shape because ``_paged_attend`` consults it per layer per engine
+    step.  (Interpret mode stays the paged kernel's own decision —
+    ``kernels.paged`` resolves it per backend.)"""
+    n_shards = max(n_shards, 1)
     q_b = 4 * span * n_heads * head_dim
-    kv_b = 2 * page_size * n_kv_heads * head_dim * kv_bytes
-    dequant_b = 2 * 4 * page_size * n_kv_heads * head_dim if scale_bytes \
-        else 0
+    kv_b = 2 * page_size * n_kv_heads * head_dim * kv_bytes / n_shards
+    dequant_b = (2 * 4 * page_size * n_kv_heads * head_dim / n_shards
+                 if scale_bytes else 0)
     scratch_b = 4 * (2 * span * n_heads + span * n_heads * head_dim)
     out_b = 4 * span * n_heads * head_dim
-    total = q_b + kv_b + dequant_b + scale_bytes + scratch_b + out_b
+    total = (q_b + kv_b + dequant_b + scale_bytes / n_shards
+             + scratch_b + out_b)
     return total <= VMEM_BUDGET_BYTES
 
 

@@ -25,12 +25,39 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh() -> jax.sharding.Mesh:
-    """Single-device mesh for CPU smoke runs of the launch stack."""
+def make_host_mesh(*, model: int | None = None,
+                   data: int | None = None) -> jax.sharding.Mesh:
+    """``("data", "model")`` mesh over the visible host devices.
+
+    With no arguments, picks a sensible default over ALL visible devices
+    (``model=2`` when >=4 devices, else ``model=1``) — it never silently
+    drops devices the way the old ``(1, 1)`` fallback did.  Explicit
+    ``model=`` / ``data=`` override the axis sizes (the olmax trick,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, is how CI gets
+    more than one host device); an axis that does not divide the device
+    count is an error, not a silent reshape.
+    """
     n = len(jax.devices())
-    if n >= 4:
-        return jax.make_mesh((n // 2, 2), ("data", "model"))
-    return jax.make_mesh((1, 1), ("data", "model"))
+    if model is None and data is None:
+        model = 2 if n >= 4 else 1
+    if model is not None:
+        if n % model != 0:
+            raise ValueError(
+                f"model={model} does not divide the {n} visible devices "
+                f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                f"to fake more host devices)")
+        if data is None:
+            data = n // model
+    else:  # data given, model not
+        if n % data != 0:
+            raise ValueError(
+                f"data={data} does not divide the {n} visible devices")
+        model = n // data
+    if model * data != n:
+        raise ValueError(
+            f"mesh ({data} data x {model} model) = {model * data} devices, "
+            f"but {n} are visible — axes must multiply to the device count")
+    return jax.make_mesh((data, model), ("data", "model"))
 
 
 __all__ = ["make_production_mesh", "make_host_mesh"]

@@ -25,6 +25,14 @@ GQA stacks (n_heads != n_kv_heads) have differently-shaped Q vs K/V
 factors; there K and V (always same shape) fuse into ``wkv`` and Q stays
 separate.  Quantization composes: fuse first, then ``quant.quantize_tree``
 — the fused factor quantizes with per-block scales like any other.
+
+Tensor parallelism composes too, without any fusion-specific rules: the
+``sharding/params.py`` suffix rules match by substring containment, so the
+fused keys ``wqkv``/``wkv`` hit the ``("wq", "w")`` / ``("wk", "w")``
+column-parallel rules and ``w1g`` hits ``("w1", "w")`` — the concatenated
+output axis shards over "model" exactly like the unfused projections it
+replaced (the concat axis IS the sharded output axis), so fuse-then-shard
+equals shard-then-fuse.
 """
 
 from __future__ import annotations

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.linear import MonarchSpec, linear_apply, linear_init
 from repro.models.config import ModelConfig, MoEConfig
-from repro.sharding import logical
+from repro.sharding import current_mesh, logical
 
 
 # ---------------------------------------------------------------------------
@@ -404,7 +404,16 @@ def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
         vp = vp.at[phys, off].set(v.astype(vp.dtype))
         new_cache = {"k_pages": kp, "v_pages": vp}
 
-    if cfg.paged_kernel and cfg.logit_softcap is None:
+    # tensor-parallel trace? Pallas custom calls don't partition under
+    # GSPMD, so with a >1 "model" axis active the span kernel would force
+    # an all-gather of the sharded pages; the dense-gather path below
+    # instead partitions naturally on the KV-head axis.  (A future
+    # shard_map'd kernel would pass its per-shard KV count via the honest
+    # ``n_shards`` knob on ``paged_span_fits``.)
+    mesh = current_mesh()
+    tp = 1 if mesh is None else dict(mesh.shape).get("model", 1)
+
+    if cfg.paged_kernel and cfg.logit_softcap is None and tp == 1:
         from repro.kernels.ops import paged_span_fits
         from repro.kernels.paged import (  # lazy: optional path
             paged_attention, paged_attention_span)

@@ -479,6 +479,11 @@ def paged_mixed_step(params, tokens: jax.Array, start: jax.Array,
     idx = (jnp.maximum(span_len, 1) - 1)[:, None, None]
     xl = jnp.take_along_axis(x, idx, axis=1)  # (B,1,d): last real position
     logits = L.unembed(params["embedding"], xl, cfg)
+    # under a tensor-parallel trace the unembed leaves logits split on the
+    # vocab axis; constrain them so sampling sees the full row (no-op when
+    # no mesh is active or vocab doesn't divide the model axis)
+    from repro.sharding import logical
+    logits = logical(logits, "batch", "seq", None)
     return logits[:, 0], new_pool
 
 

@@ -1,11 +1,49 @@
 """Serving runtime: unified chunked-prefill + decode iterations over a
 refcounted, prefix-sharing paged KV cache, with CIM-cost-aware scheduling,
-copy-on-write page forks and preemption.
+copy-on-write page forks, preemption, and tensor parallelism over a
+``("data", "model")`` device mesh.
 
 Every engine iteration is ONE mixed forward: each admitted sequence
 contributes a variable-length token span — a prefill chunk, the tail of a
 chunked prompt, or a single decode token — so long prompts never
 head-of-line-block the decode batch and there is no separate prefill pass.
+That stays true under tensor parallelism: the TP engine compiles the same
+mixed step once per mesh (GSPMD partitions it from the parameter
+shardings and ``sharding/api.logical`` activation constraints) and every
+iteration is still one jitted dispatch.
+
+Tensor-parallel ownership contract (``DeviceKV``, the device half of the
+KV pool — the paper's per-array weight/KV residency, software edition):
+
+  * REPLICATED ON HOST: page tables, the refcounted prefix trie, free
+    lists, cursors.  The host pool plans in LOGICAL pages and never sees a
+    shard, so scheduling, admission, preemption, prefix matching and COW
+    planning are global decisions, byte-identical at every ``tp``.
+  * SHARDED ON DEVICE: page buffers split on their KV-head axis over the
+    mesh's "model" axis (per-(page, kv_head) int8 scale rows ride with
+    their heads); Monarch/attention weights split by the
+    ``sharding/params.py`` suffix rules (stage-1 block-rows column-
+    parallel, stage-2 contraction row-parallel -> one all-reduce, the
+    software twin of the paper's inter-array reduction bus).  A KV-head
+    count "model" does not divide leaves the pool replicated
+    (``kv_shard == 1``) — GQA-correct, never uneven.
+  * WRITES STAY LOCAL: span writes and COW copies scatter on the page
+    axis, which is never sharded — every shard performs the same
+    page-granular operation on its local KV-head slice, no cross-shard
+    traffic.
+  * SNAPSHOTS ARE MESH-INDEPENDENT: ``DeviceKV.export`` gathers shards,
+    ``DeviceKV.load`` re-shards onto the restoring mesh, and
+    ``DeviceKV.check_shards`` is the per-shard recovery invariant.
+  * ``mesh=None`` (the default) bypasses all of it — the single-device
+    engine path is bit-identical to the pre-mesh code, and ``tp>1``
+    greedy decoding is token-identical to ``tp=1``.
+
+Per-shard page budgets: ``pool_bytes`` is the budget of ONE shard's
+memory, so the engine sizes the pool by ``shard_page_bytes`` (a page's
+bytes divided by ``kv_shard``) — at ``tp=N`` the same budget holds ~N×
+the logical pages.  Both cost models take ``tp=`` and price the split
+(weights /tp, KV /kv_shard) plus the all-reduce term
+(``scheduler.tp_allreduce_bytes_per_token``).
 
 Lifecycle:  WAITING -> PREFILLING -> RUNNING -> FINISHED, with preemption
 sending PREFILLING/RUNNING back to WAITING.  A PREFILLING request's
@@ -122,8 +160,12 @@ Module map:
                  confinement, and sharing-aware ``PoolStats``
                  (shared/unique/cached pages, prefix hit tokens + rate,
                  high-water ``peak_pages``/``peak_bytes``, LRU
-                 ``cache_evictions``).  Host-side twin of the device pool
-                 in ``models.transformer.init_paged_pool``.
+                 ``cache_evictions``, per-shard ``kv_shard`` /
+                 ``shard_page_bytes``).  Host-side twin of the device
+                 pool in ``models.transformer.init_paged_pool``.
+  device_kv.py — ``DeviceKV``: owner of the device-side pool pytree and
+                 its mesh placement (see the TP ownership contract
+                 above); ``export`` / ``load`` / ``check_shards``.
   scheduler.py — ``IterationScheduler.plan_step``: packs prefill chunks
                  around the in-flight decodes each step under
                  slot/page/token/latency budgets; admission budgets count
@@ -168,6 +210,8 @@ into fewer preemptions.  ``PoolStats`` reports the physical bytes; both
 cost models price the KV stream at the stored width.
 """
 
+from repro.serving.device_kv import (DeviceKV,  # noqa: F401
+                                     kv_shard_size, pool_shardings)
 from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
                                   GenerationConfig, ServeEngine)
 from repro.serving.faults import (DispatchFailure,  # noqa: F401

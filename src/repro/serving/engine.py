@@ -65,6 +65,18 @@ under token/page/latency budgets priced by the cost model.
     ``serving/faults.py`` drive chaos testing (pool exhaustion, dispatch
     failure, simulated crashes, clock skew) against the recovery
     invariants.  See ``serving/__init__`` for the recovery contract.
+  * the engine is *tensor-parallel*: ``mesh=`` serves the model sharded
+    over a ``("data", "model")`` mesh — Monarch/attention factors placed
+    by the ``sharding/params.py`` suffix rules, activations constrained by
+    the ``logical()`` tags in ``models/layers.py``, and the paged pool
+    owned by a ``DeviceKV`` whose page buffers and quant-scale rows are
+    split on the KV-head axis (see ``serving/device_kv.py`` for the
+    ownership contract).  Scheduling, preemption, prefix sharing and COW
+    stay host-global (logical pages); only the bytes behind each page are
+    per-shard.  The mixed step still compiles ONCE (per span bucket) —
+    ``_mixed_step_tp_jit`` bakes the mesh in as a static arg and GSPMD
+    partitions the single forward.  ``mesh=None`` is byte-identical to
+    the single-device engine.
 """
 
 from __future__ import annotations
@@ -135,9 +147,8 @@ def _bucket(n: int, lo: int = 1) -> int:
 # span bucket (power-of-two padded max span), not per batch composition.
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
-def _mixed_step_jit(params, pool, chunk_tok, tok_dev, use_dev, start, span,
-                    pt, wstart, sample_mask, temp, keys, *, cfg):
+def _mixed_step_body(params, pool, chunk_tok, tok_dev, use_dev, start, span,
+                     pt, wstart, sample_mask, temp, keys, cfg):
     """ONE unified engine iteration over the slot batch.
 
     ``chunk_tok`` (B, S) carries host-known span tokens (prefill chunks);
@@ -159,6 +170,45 @@ def _mixed_step_jit(params, pool, chunk_tok, tok_dev, use_dev, start, span,
     tok_new = jnp.where(sample_mask, sampled, tok_dev)
     keys_new = jnp.where(sample_mask[:, None], carry, keys)
     return pool, sampled, tok_new, keys_new
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def _mixed_step_jit(params, pool, chunk_tok, tok_dev, use_dev, start, span,
+                    pt, wstart, sample_mask, temp, keys, *, cfg):
+    return _mixed_step_body(params, pool, chunk_tok, tok_dev, use_dev, start,
+                            span, pt, wstart, sample_mask, temp, keys, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"),
+                   donate_argnums=(1,))
+def _mixed_step_tp_jit(params, pool, chunk_tok, tok_dev, use_dev, start, span,
+                       pt, wstart, sample_mask, temp, keys, *, cfg, mesh):
+    """Tensor-parallel mixed step: same body, compiled under the mesh.
+
+    A SEPARATE jit from ``_mixed_step_jit`` on purpose: the ``logical()``
+    tags in ``models/layers.py`` read the thread-local mesh at TRACE time,
+    and jax's trace cache is keyed on avals, not shardings — sharing one
+    jit between the tp=1 and tp>1 paths could silently reuse a trace made
+    without the constraints.  With the (hashable) mesh as a static arg the
+    constraint-baked trace is cached per mesh, the tp=1 path stays
+    bit-identical to the pre-mesh code, and every engine iteration is
+    still ONE compiled mixed forward — GSPMD partitions it from the param/
+    pool input shardings plus the activation constraints."""
+    from repro.serving.device_kv import kv_shard_size, pool_shardings
+    from repro.sharding.api import axis_rules
+
+    with axis_rules(mesh):
+        pool, sampled, tok_new, keys_new = _mixed_step_body(
+            params, pool, chunk_tok, tok_dev, use_dev, start, span, pt,
+            wstart, sample_mask, temp, keys, cfg)
+        # pin the output pool to the DeviceKV contract placement — without
+        # this GSPMD is free to re-shard a replicated (kv_shard=1) pool on
+        # whatever layout the attention partitioning prefers, drifting the
+        # placement step over step
+        shardings = pool_shardings(pool, mesh, kv_shard_size(cfg, mesh))
+        pool = jax.tree_util.tree_map(jax.lax.with_sharding_constraint,
+                                      pool, shardings)
+        return pool, sampled, tok_new, keys_new
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -195,7 +245,8 @@ class ContinuousBatchingEngine:
                  metrics: bool = True,
                  trace: Union[bool, str, os.PathLike, None] = None,
                  fault_injector=None,
-                 heartbeat=None, heartbeat_rank: int = 0):
+                 heartbeat=None, heartbeat_rank: int = 0,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         if cfg.layer_kind != "attn":
             raise ValueError(
                 "continuous batching needs an attn stack; SSM/hybrid models "
@@ -225,6 +276,24 @@ class ContinuousBatchingEngine:
                 bits=BITS_BY_NAME.get(quantize))
         self.weight_bits = BITS_BY_NAME.get(quantize, 32)
         self.cfg = cfg
+        # -- tensor parallelism over a ("data", "model") mesh --------------
+        # Params are placed by the path-suffix rules (sharding/params.py):
+        # Monarch stage-1 block-rows and attention heads over "model",
+        # stage-2 contractions as partial sums GSPMD all-reduces.  The
+        # sharding is applied AFTER fusion/quantization so fused keys
+        # (wqkv/wkv/w1g) and quantized factors land under the same rules
+        # (unmatched leaves replicate — always correct).  mesh=None keeps
+        # the single-device path byte-for-byte.
+        self.mesh = mesh
+        self.tp = 1
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"engine mesh needs a 'model' axis, got {mesh.axis_names}")
+            self.tp = dict(mesh.shape)["model"]
+            from repro.sharding.params import param_shardings
+
+            params = jax.device_put(params, param_shardings(params, mesh))
         self.params = params
         self.page_size = page_size
         self.max_len = max_len
@@ -243,6 +312,17 @@ class ContinuousBatchingEngine:
             "bf16" if cfg.dtype == "bfloat16" else "fp32")
         page_bytes = kv_page_bytes(cfg.n_layers, cfg.n_kv_heads, cfg.hd,
                                    page_size, self.kv_dtype)
+        # per-shard physical weight of one logical page: each model-axis
+        # shard stores only its own KV heads' rows (and scale entries), so
+        # a byte budget — a PER-SHARD HBM budget under a mesh — divides by
+        # the smaller per-shard page footprint and yields ~kv_shard x the
+        # page count at tp=kv_shard
+        from repro.serving.device_kv import DeviceKV, kv_shard_size
+
+        kv_shard = kv_shard_size(cfg, mesh)
+        shard_page_bytes = kv_page_bytes(
+            cfg.n_layers, cfg.n_kv_heads // kv_shard, cfg.hd, page_size,
+            self.kv_dtype)
         if n_pages is not None and pool_bytes is not None:
             raise ValueError(
                 "pass n_pages (a page count) OR pool_bytes (a byte budget "
@@ -251,15 +331,16 @@ class ContinuousBatchingEngine:
             if pool_bytes is not None:
                 # fixed byte budget -> dtype-aware page count: the knob the
                 # kv_quant benchmark sweeps (int8 ~4x the fp32 pages)
-                n_pages = 1 + max(1, pool_bytes // page_bytes)
+                n_pages = 1 + max(1, pool_bytes // shard_page_bytes)
             else:  # worst case: every slot at max_len, plus sink
                 n_pages = 1 + max_slots * self.max_pages_per_seq
         self.pool_host = PagedKVPool(n_pages, page_size,
                                      self.max_pages_per_seq,
                                      kv_dtype=self.kv_dtype,
-                                     page_bytes=page_bytes)
-        self.pool = T.init_paged_pool(cfg, n_pages, page_size,
-                                      kv_dtype=kv_dtype)
+                                     page_bytes=page_bytes,
+                                     kv_shard=kv_shard)
+        self.kv = DeviceKV(cfg, n_pages, page_size, kv_dtype=kv_dtype,
+                           mesh=mesh)
         self.prefix_sharing = prefix_sharing
         sc = scheduler_cfg or SchedulerConfig()
         sc = dataclasses.replace(sc, max_slots=max_slots,
@@ -323,7 +404,11 @@ class ContinuousBatchingEngine:
             self._g_cached = g("pool.cached_pages")
             self._g_held = g("pool.held_pages")
             self._g_evict = g("pool.cache_evictions")
-        self._mixed = functools.partial(_mixed_step_jit, cfg=self.cfg)
+        if mesh is None:
+            self._mixed = functools.partial(_mixed_step_jit, cfg=self.cfg)
+        else:
+            self._mixed = functools.partial(_mixed_step_tp_jit, cfg=self.cfg,
+                                            mesh=mesh)
 
         # -- fault tolerance ------------------------------------------------
         # ``_clock`` is THE time source for lifecycle stamps, deadline
@@ -340,6 +425,19 @@ class ContinuousBatchingEngine:
         # requests finished outside _step_inner (``cancel()``, the drains
         # it triggers) surface through the next ``step()``'s return value
         self._overflow: list[Request] = []
+
+    # -- device KV ownership -----------------------------------------------
+    # The pool pytree lives in DeviceKV (placement, snapshot transfer, the
+    # per-shard invariant); the property keeps the mixed step's
+    # donate-and-replace idiom — and every existing call site — unchanged.
+
+    @property
+    def pool(self):
+        return self.kv.pool
+
+    @pool.setter
+    def pool(self, value):
+        self.kv.pool = value
 
     # -- request intake ----------------------------------------------------
 

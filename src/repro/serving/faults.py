@@ -211,10 +211,16 @@ def assert_recovery_invariants(engine) -> None:
         fault-injector hold, which uses negative seq ids) — anything else
         is a leaked page table;
       * resident sequences' page_ids mirror the pool's tables, and slot
-        accounting is exact (free slots + running == max_slots).
+        accounting is exact (free slots + running == max_slots);
+      * on a tensor-parallel engine, every device pool leaf still sits at
+        the ``DeviceKV`` contract's placement with the expected per-shard
+        KV-head slice (``DeviceKV.check_shards``).
     """
     pool = engine.pool_host
     pool.check_invariants()
+    kv = getattr(engine, "kv", None)
+    if kv is not None:
+        kv.check_shards()
     running = {s.req_id: s for s in engine.running.values()}
     for slot, seq in engine.running.items():
         assert seq.slot == slot, (slot, seq.slot)

@@ -99,6 +99,12 @@ class PoolStats:
     # LRU reclaim pressure: cached-only pages evicted from the trie because
     # an allocation needed them (0 == the cache never had to shrink)
     cache_evictions: int = 0
+    # tensor parallelism: how many mesh shards split the KV-head axis
+    # (DeviceKV), and what ONE shard physically stores per logical page —
+    # page_bytes stays the GLOBAL footprint across all shards, so capacity
+    # planning per device reads shard_page_bytes
+    kv_shard: int = 1
+    shard_page_bytes: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,7 +173,8 @@ class PagedKVPool:
 
     def __init__(self, n_pages: int, page_size: int,
                  max_pages_per_seq: Optional[int] = None,
-                 kv_dtype: str = "fp32", page_bytes: int = 0):
+                 kv_dtype: str = "fp32", page_bytes: int = 0,
+                 kv_shard: int = 1):
         if n_pages < 2:
             raise ValueError("need at least one usable page beyond the sink")
         self.n_pages = n_pages
@@ -175,9 +182,13 @@ class PagedKVPool:
         self.max_pages_per_seq = max_pages_per_seq
         # physical accounting only — allocation is page-granular regardless
         # of width; the engine sizes n_pages from a byte budget, so an int8
-        # pool simply has ~4x the pages of an equal-budget fp32 pool
+        # pool simply has ~4x the pages of an equal-budget fp32 pool.
+        # ``kv_shard`` (DeviceKV) records how many mesh shards split each
+        # page's KV-head axis: allocation stays LOGICAL (global pages,
+        # identical at every tp), only the byte reporting divides.
         self.kv_dtype = kv_dtype
         self.page_bytes = page_bytes
+        self.kv_shard = max(int(kv_shard), 1)
         # LIFO free list keeps recently-freed (cache-warm) pages hot
         self._free: list[int] = list(range(n_pages - 1, SINK_PAGE, -1))
         self._tables: dict[int, list[int]] = {}   # seq_id -> page ids
@@ -267,6 +278,8 @@ class PagedKVPool:
             peak_pages=self.peak_pages,
             peak_bytes=self.page_bytes * self.peak_pages,
             cache_evictions=self.cache_evictions,
+            kv_shard=self.kv_shard,
+            shard_page_bytes=self.page_bytes // self.kv_shard,
         )
 
     # -- page supply (free list + LRU trie reclaim) ------------------------
@@ -627,6 +640,7 @@ class PagedKVPool:
             "max_pages_per_seq": self.max_pages_per_seq,
             "kv_dtype": self.kv_dtype,
             "page_bytes": self.page_bytes,
+            "kv_shard": self.kv_shard,
             "free": [int(p) for p in self._free],
             "tables": [[int(s), [int(p) for p in t]]
                        for s, t in self._tables.items()],
@@ -649,7 +663,8 @@ class PagedKVPool:
         then ``check_invariants`` runs before the pool is handed back."""
         pool = cls(state["n_pages"], state["page_size"],
                    max_pages_per_seq=state["max_pages_per_seq"],
-                   kv_dtype=state["kv_dtype"], page_bytes=state["page_bytes"])
+                   kv_dtype=state["kv_dtype"], page_bytes=state["page_bytes"],
+                   kv_shard=state.get("kv_shard", 1))
         pool._free = [int(p) for p in state["free"]]
         pool._tables = {int(s): [int(p) for p in t]
                         for s, t in state["tables"]}

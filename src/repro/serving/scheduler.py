@@ -101,20 +101,52 @@ class CostModel(Protocol):
         ...
 
 
+def tp_allreduce_bytes_per_token(cfg, tp: int) -> float:
+    """Ring all-reduce traffic one shard moves per token at tensor
+    parallelism ``tp``: two partial-sum reductions per layer (the attention
+    output projection and the Monarch stage-2 contraction, both sharded on
+    their contraction dim by the ``sharding/params.py`` Megatron-pair
+    rules), each a ``d_model``-wide fp32 ring all-reduce costing
+    ``2 * (tp - 1) / tp`` elements sent per element reduced — the software
+    twin of the paper's inter-array reduction bus, which merges per-array
+    partial sums before the next stage."""
+    if tp <= 1:
+        return 0.0
+    return 2.0 * (tp - 1) / tp * cfg.d_model * 4.0 * 2 * cfg.n_layers
+
+
 @dataclasses.dataclass
 class HBMCostModel:
-    """Bytes-moved roofline for a weight-streaming (GPU/HBM) backend."""
+    """Bytes-moved roofline for a weight-streaming (GPU/HBM) backend.
+
+    Tensor parallelism (``tp`` > 1) divides the per-shard weight stream by
+    ``tp`` and the KV stream by ``kv_shard`` (the KV-head split — equals
+    ``tp`` when it divides ``n_kv_heads``, else 1/replicated, matching
+    ``DeviceKV``), and adds a per-token all-reduce term priced at the
+    reduction-bus bandwidth: each step is as slow as its slowest shard, so
+    the roofline prices ONE shard's bytes plus its collective traffic."""
 
     n_params: int                 # active parameters per token
     kv_bytes_per_token: float     # 2 * n_layers * n_kv_heads * hd * dtype
     bytes_per_param: float = 2.0
     bandwidth_gbps: float = 400.0
     compute_gflops: float = 50_000.0   # prefill matmul throughput
+    tp: int = 1                   # model-axis shards (weights / compute)
+    kv_shard: int = 1             # KV-head shards (pool pages)
+    allreduce_bytes_per_token: float = 0.0
+    reduce_bandwidth_gbps: float = 300.0   # inter-shard reduction bus
+
+    def _allreduce_ns(self, n_tokens: float) -> float:
+        if self.allreduce_bytes_per_token <= 0.0:
+            return 0.0
+        return (n_tokens * self.allreduce_bytes_per_token
+                / self.reduce_bandwidth_gbps)
 
     def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
-        weight_bytes = self.n_params * self.bytes_per_param
-        kv_bytes = n_seqs * avg_ctx * self.kv_bytes_per_token
-        return (weight_bytes + kv_bytes) / self.bandwidth_gbps
+        weight_bytes = self.n_params * self.bytes_per_param / self.tp
+        kv_bytes = n_seqs * avg_ctx * self.kv_bytes_per_token / self.kv_shard
+        return ((weight_bytes + kv_bytes) / self.bandwidth_gbps
+                + self._allreduce_ns(n_seqs))
 
     def prefill_ns(self, n_tokens: int, cached_tokens: int = 0) -> float:
         # one weight pass (amortized over the chunk) + per-token compute:
@@ -126,9 +158,26 @@ class HBMCostModel:
         computed = max(n_tokens - cached_tokens, 0)
         if computed == 0:
             return 0.0
-        weight_ns = self.n_params * self.bytes_per_param / self.bandwidth_gbps
-        compute_ns = 2.0 * self.n_params * computed / self.compute_gflops
-        return weight_ns + compute_ns
+        weight_ns = (self.n_params * self.bytes_per_param
+                     / (self.tp * self.bandwidth_gbps))
+        compute_ns = (2.0 * self.n_params * computed
+                      / (self.tp * self.compute_gflops))
+        return weight_ns + compute_ns + self._allreduce_ns(computed)
+
+    def shard_decode_bytes_per_token(self, avg_ctx: float,
+                                     n_seqs: int = 1) -> dict:
+        """What ONE shard reads from its local memory per decoded token —
+        the number the tp sweep in ``BENCH_serving.json`` tracks: weight
+        bytes amortized over the batch and divided ``tp`` ways, KV history
+        bytes divided ``kv_shard`` ways, plus the all-reduce bytes the
+        shard sends (collective traffic, not local HBM — reported
+        separately so the ~Nx local reduction at tp=N stays visible)."""
+        weight = self.n_params * self.bytes_per_param / (
+            self.tp * max(n_seqs, 1))
+        kv = avg_ctx * self.kv_bytes_per_token / self.kv_shard
+        return {"weight_bytes": weight, "kv_bytes": kv,
+                "weight_kv_bytes": weight + kv,
+                "allreduce_bytes": self.allreduce_bytes_per_token}
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
         return 0.0
@@ -137,21 +186,30 @@ class HBMCostModel:
         return 0.0
 
     @classmethod
-    def from_model_config(cls, cfg, kv_dtype: str = "bf16",
+    def from_model_config(cls, cfg, kv_dtype: str = "bf16", tp: int = 1,
                           **kw) -> "HBMCostModel":
         """``kv_dtype`` prices the KV stream at the serving pool's STORED
         page width ("fp32" | "bf16" | "int8"): decoding against an int8
         pool gathers a quarter of the fp32 bytes per context token, so the
         roofline admits wider batches / longer contexts before the KV term
         dominates the weight pass.  Default bf16 preserves the historical
-        2 bytes/KV-element pricing."""
+        2 bytes/KV-element pricing.  ``tp`` prices a tensor-parallel engine:
+        weights split ``tp`` ways, KV split ``kv_shard`` ways (``tp`` when
+        it divides ``n_kv_heads``, else replicated — the ``DeviceKV`` rule),
+        and the two per-layer partial-sum all-reduces priced on the
+        reduction bus."""
         from repro.cim.workload import decode_kv_bytes_per_token
         from repro.core.quant import KV_DTYPE_BYTES
 
         kvb = decode_kv_bytes_per_token(
             cfg, kv_bits=int(8 * KV_DTYPE_BYTES[kv_dtype]))
+        if tp > 1:
+            kw.setdefault("kv_shard",
+                          tp if cfg.n_kv_heads % tp == 0 else 1)
+            kw.setdefault("allreduce_bytes_per_token",
+                          tp_allreduce_bytes_per_token(cfg, tp))
         return cls(n_params=cfg.active_param_count(),
-                   kv_bytes_per_token=kvb, **kw)
+                   kv_bytes_per_token=kvb, tp=tp, **kw)
 
     @classmethod
     def from_params(cls, cfg, params, **kw) -> "HBMCostModel":
@@ -176,13 +234,20 @@ class CIMCostModel:
     ``n`` sequences costs ``n x`` that (weights-stationary arrays process
     each sequence's bit-serial activation stream in turn), plus a DPU term
     for the non-parameterized attention matmuls that grows with context.
+
+    ``tp`` > 1 models ``tp`` parallel array groups each holding 1/tp of
+    every projection's block-rows (the paper's per-array residency): the
+    bit-serial stream time divides by ``tp``, the DPU's KV stream divides
+    by ``kv_shard``, and partial sums cross the inter-array reduction bus
+    (``reduce_bus_gbps``) twice per layer.
     """
 
     def __init__(self, model_cfg, strategy: str = "sparse",
                  cim_cfg=None, seq_len: int = 512,
                  attn_dpu_ns_per_key: float = 0.05,
                  weight_bits: int = 8, fused_proj: bool = False,
-                 kv_bits: int = 32):
+                 kv_bits: int = 32, tp: int = 1,
+                 reduce_bus_gbps: float = 128.0):
         import dataclasses as _dc
 
         from repro.cim.simulator import simulate
@@ -209,6 +274,20 @@ class CIMCostModel:
         width_ratio = (decode_kv_bytes_per_token(model_cfg, kv_bits)
                        / decode_kv_bytes_per_token(model_cfg, 32))
         self.attn_dpu_ns_per_key = attn_dpu_ns_per_key * width_ratio
+        # tensor parallelism: tp array groups stream concurrently, the DPU
+        # scans only its local KV heads, partial sums ride the reduction bus
+        self.model_cfg = model_cfg
+        self.weight_bits = weight_bits
+        self.tp = max(int(tp), 1)
+        self.kv_shard = (self.tp if self.tp > 1
+                         and model_cfg.n_kv_heads % self.tp == 0 else 1)
+        self.reduce_bus_gbps = reduce_bus_gbps
+        self.allreduce_bytes_per_token = tp_allreduce_bytes_per_token(
+            model_cfg, self.tp)
+        self.per_token_ns = (self.per_token_ns / self.tp
+                             + self.allreduce_bytes_per_token
+                             / self.reduce_bus_gbps)
+        self.attn_dpu_ns_per_key /= self.kv_shard
 
     def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
         attn = self.attn_dpu_ns_per_key * avg_ctx
@@ -218,6 +297,24 @@ class CIMCostModel:
         # cached tokens never stream through the DAC/ADC arrays — a prefix
         # hit costs zero bit-serial cycles, only page-table pointer updates
         return max(n_tokens - cached_tokens, 0) * self.per_token_ns
+
+    def shard_decode_bytes_per_token(self, avg_ctx: float,
+                                     n_seqs: int = 1) -> dict:
+        """One array group's local traffic per decoded token, mirroring
+        ``HBMCostModel.shard_decode_bytes_per_token`` so the bench's tp
+        sweep can compare both backends on the same axes: weight bytes at
+        the stored cell precision split ``tp`` ways, DPU-streamed KV bytes
+        split ``kv_shard`` ways, reduction-bus bytes reported alongside."""
+        from repro.cim.workload import decode_kv_bytes_per_token
+
+        weight = (self.model_cfg.active_param_count()
+                  * self.weight_bits / 8.0) / (self.tp * max(n_seqs, 1))
+        kv = (avg_ctx * decode_kv_bytes_per_token(self.model_cfg,
+                                                  self.kv_bits)
+              / self.kv_shard)
+        return {"weight_bytes": weight, "kv_bytes": kv,
+                "weight_kv_bytes": weight + kv,
+                "allreduce_bytes": self.allreduce_bytes_per_token}
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
         return n_seqs * self.per_token_nj

@@ -32,8 +32,14 @@ Recovery contract (what survives, what is recomputed, what is checked):
     refcounts from the page tables and runs ``check_invariants`` (a
     snapshot cannot smuggle in drifted refcounts), and
     ``faults.assert_recovery_invariants`` cross-checks engine-vs-pool
-    state (no leaked reservations, exact slot accounting) before the
-    engine is handed back.
+    state (no leaked reservations, exact slot accounting, per-shard KV
+    placement) before the engine is handed back.
+  * **Mesh-shape independent**: the KV pages are exported through
+    ``DeviceKV.export`` (a cross-shard gather on a tensor-parallel
+    engine) and restored through ``DeviceKV.load`` (a re-shard onto the
+    restoring engine's mesh), so a ``tp=8`` snapshot restores onto
+    ``tp=1`` and vice versa — pass ``mesh=`` in ``engine_kw`` to pick
+    the new placement.
 """
 
 from __future__ import annotations
@@ -124,13 +130,14 @@ def snapshot_engine(engine, include_kv: bool = True) -> dict:
     }
     if include_kv:
         snap["pool_host"] = engine.pool_host.export_state()
-        snap["device"] = jax.device_get({
-            "kv": engine.pool,
+        # DeviceKV.export gathers every shard: the snapshot form is
+        # mesh-shape independent (restores onto any tp)
+        snap["device"] = {"kv": engine.kv.export(), **jax.device_get({
             "tok": engine._tok,
             "keys": engine._keys,
             "temp": engine._temp,
             "wstart": engine._wstart,
-        })
+        })}
     engine.stats["snapshots"] += 1
     return snap
 
@@ -190,8 +197,11 @@ def restore_engine(snap: dict, cfg, params, **engine_kw):
     full = snap.get("include_kv") and snap.get("device") is not None
     if full:
         eng.pool_host = PagedKVPool.from_state(snap["pool_host"])
+        # the restoring engine's mesh decides the KV split, not the
+        # snapshot's: a tp=8 snapshot restores onto tp=1 and vice versa
+        eng.pool_host.kv_shard = eng.kv.kv_shard
         dev = snap["device"]
-        eng.pool = jax.tree_util.tree_map(jnp.asarray, dev["kv"])
+        eng.kv.load(dev["kv"])
         eng._tok = jnp.asarray(np.asarray(dev["tok"], np.int32))
         eng._keys = jnp.asarray(np.asarray(dev["keys"], np.uint32))
         eng._temp = jnp.asarray(np.asarray(dev["temp"], np.float32))

@@ -93,7 +93,9 @@ def _axis_size(mesh: Mesh, axes) -> int:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    # mesh.shape is {axis name: size} on both Mesh and AbstractMesh, so the
+    # divisibility guard works on device-less meshes (rule unit tests)
+    sizes = dict(mesh.shape)
     n = 1
     for a in axes:
         n *= sizes.get(a, 1)

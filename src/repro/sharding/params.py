@@ -23,9 +23,11 @@ def _axis_size(mesh: Mesh, axes) -> int:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
+    # mesh.shape works on Mesh and AbstractMesh alike (device-less tests)
+    sizes = dict(mesh.shape)
     size = 1
     for a in axes:
-        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+        size *= sizes.get(a, 1)
     return size
 
 

@@ -1,0 +1,214 @@
+"""Tensor-parallel serving: greedy token identity at tp>1 vs tp=1 through
+every serving feature, and the DeviceKV placement contract.
+
+These tests need multiple devices; CI provides them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the olmax host-mesh
+trick).  On a plain single-device runner everything here skips.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.request import SamplingParams
+
+N_DEV = len(jax.devices())
+
+# MHA config: every parallel dim (heads, kv_heads, d_ff blocks, vocab)
+# divides 8, so tp=8 shards weights AND the KV pool
+CFG = ModelConfig(name="tp_test", d_model=128, n_layers=2, n_heads=8,
+                  n_kv_heads=8, d_ff=256, vocab=512, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _mesh(tp):
+    if tp == 1:
+        return None
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh(model=tp)
+
+
+def _prompts(n, lo=8, hi=14, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(map(int, rng.randint(1, CFG.vocab - 1, rng.randint(lo, hi))))
+            for _ in range(n)]
+
+
+def _serve(params, prompts, mesh=None, max_new=8, temperature=0.0,
+           **engine_kw):
+    eng = ContinuousBatchingEngine(CFG, params, mesh=mesh, **engine_kw)
+    sp = SamplingParams(max_new_tokens=max_new, temperature=temperature)
+    ids = [eng.add_request(p, sampling=sp).req_id for p in prompts]
+    outs, steps = {}, 0
+    while len(outs) < len(ids):
+        for r in eng.step():
+            outs[r.req_id] = list(r.output_tokens)
+        steps += 1
+        assert steps < 2000, "engine did not converge"
+    return [outs[i] for i in ids], eng
+
+
+def _tps():
+    return [tp for tp in (2, 4, 8) if tp <= N_DEV and N_DEV % tp == 0]
+
+
+pytestmark = pytest.mark.skipif(
+    N_DEV < 2, reason="tensor parallelism needs >1 device "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.mark.parametrize("tp", [2, 4, 8])
+def test_tp_greedy_identity(params, tp):
+    if tp > N_DEV or N_DEV % tp:
+        pytest.skip(f"needs {tp} devices")
+    prompts = _prompts(4)
+    base, _ = _serve(params, prompts, mesh=None,
+                     max_slots=4, page_size=8, n_pages=64, max_len=64)
+    out, eng = _serve(params, prompts, mesh=_mesh(tp),
+                      max_slots=4, page_size=8, n_pages=64, max_len=64)
+    assert out == base
+    assert eng.tp == tp
+    eng.kv.check_shards()
+
+
+def test_tp_identity_through_preemption(params):
+    tp = _tps()[-1]
+    # a pool tight enough that admitting everyone forces preemption
+    kw = dict(max_slots=3, page_size=4, n_pages=14, max_len=48,
+              chunk_size=8)
+    prompts = _prompts(6, lo=10, hi=16, seed=3)
+    base, e1 = _serve(params, prompts, mesh=None, max_new=10, **kw)
+    out, e2 = _serve(params, prompts, mesh=_mesh(tp), max_new=10, **kw)
+    assert out == base
+    assert e2.stats["preemptions"] == e1.stats["preemptions"]
+    assert e2.stats["preemptions"] > 0, "setup no longer forces preemption"
+
+
+def test_tp_identity_with_prefix_sharing_and_cow(params):
+    tp = _tps()[-1]
+    shared = list(range(1, 17))  # two full pages + COW-forcing reuse
+    followers = [shared + [100 + i] for i in range(3)] + [shared]
+    kw = dict(max_slots=4, page_size=8, n_pages=64, max_len=64)
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+
+    def serve(mesh):
+        # first request commits the shared prefix to the trie, the rest hit
+        # it (the fully-cached prompt forces a COW fork)
+        eng = ContinuousBatchingEngine(CFG, params, mesh=mesh, **kw)
+        first = eng.add_request(shared + [99], sampling=sp).req_id
+        outs = {}
+        while first not in outs:
+            for r in eng.step():
+                outs[r.req_id] = list(r.output_tokens)
+        ids = [eng.add_request(p, sampling=sp).req_id for p in followers]
+        while len(outs) < len(ids) + 1:
+            for r in eng.step():
+                outs[r.req_id] = list(r.output_tokens)
+        return [outs[i] for i in [first] + ids], eng
+
+    base, e1 = serve(None)
+    out, e2 = serve(_mesh(tp))
+    assert out == base
+    assert e2.pool_host.stats().prefix_hit_tokens == \
+        e1.pool_host.stats().prefix_hit_tokens
+    assert e2.pool_host.stats().prefix_hit_tokens > 0
+
+
+def test_tp_identity_with_int8_kv(params):
+    tp = _tps()[-1]
+    kw = dict(max_slots=4, page_size=8, n_pages=64, max_len=64,
+              kv_dtype="int8")
+    prompts = _prompts(4, seed=5)
+    base, _ = _serve(params, prompts, mesh=None, **kw)
+    out, eng = _serve(params, prompts, mesh=_mesh(tp), **kw)
+    assert out == base
+    # scale rows are sharded with their heads
+    eng.kv.check_shards()
+    assert eng.kv.kv_shard == tp
+
+
+def test_tp_snapshot_restore_cycle(params):
+    """tp=N snapshot mid-flight -> restore onto tp=N AND onto tp=1; both
+    continuations finish token-identical to an uninterrupted tp=1 run."""
+    tp = _tps()[-1]
+    kw = dict(max_slots=4, page_size=8, n_pages=64, max_len=64)
+    prompts = _prompts(4, seed=7)
+    sp = SamplingParams(max_new_tokens=10, temperature=0.0)
+
+    base, _ = _serve(params, prompts, mesh=None, max_new=10, **kw)
+
+    eng = ContinuousBatchingEngine(CFG, params, mesh=_mesh(tp), **kw)
+    ids = [eng.add_request(p, sampling=sp).req_id for p in prompts]
+    outs = {}
+    for _ in range(6):  # part-way: some decoding, nothing finished
+        for r in eng.step():
+            outs[r.req_id] = list(r.output_tokens)
+    snap = eng.snapshot()
+
+    for target_tp in (tp, 1):
+        got = dict(outs)
+        restored = ContinuousBatchingEngine.restore(
+            snap, CFG, params, mesh=_mesh(target_tp))
+        from repro.serving.faults import assert_recovery_invariants
+
+        assert_recovery_invariants(restored)
+        steps = 0
+        while len(got) < len(ids):
+            for r in restored.step():
+                got[r.req_id] = list(r.output_tokens)
+            steps += 1
+            assert steps < 2000
+        assert [got[i] for i in ids] == base, f"restore onto tp={target_tp}"
+
+
+def test_tp_pool_budget_is_per_shard(params):
+    """A fixed pool_bytes budget is ONE shard's memory: at tp=N the engine
+    holds ~N x the logical pages (KV heads split N ways per shard)."""
+    tp = _tps()[-1]
+    budget = dict(max_slots=2, page_size=8, max_len=32,
+                  pool_bytes=1 << 20)
+    e1 = ContinuousBatchingEngine(CFG, params, mesh=None, **budget)
+    eN = ContinuousBatchingEngine(CFG, params, mesh=_mesh(tp), **budget)
+    assert eN.pool_host.kv_shard == tp
+    assert eN.pool_host.n_pages >= tp * (e1.pool_host.n_pages - 1)
+    s = eN.pool_host.stats()
+    assert s.kv_shard == tp
+    assert s.shard_page_bytes * tp == s.page_bytes
+
+
+def test_tp_gqa_kv_replicates_but_weights_shard(params):
+    """KV heads the model axis does not divide leave the pool replicated
+    (kv_shard=1) while the weights still split — and outputs still match."""
+    gqa = ModelConfig(name="tp_gqa", d_model=128, n_layers=2, n_heads=8,
+                      n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
+    gparams = T.init_params(jax.random.PRNGKey(1), gqa)
+    tp = [t for t in _tps() if gqa.n_kv_heads % t][0] \
+        if any(gqa.n_kv_heads % t for t in _tps()) else None
+    if tp is None:
+        pytest.skip("no visible tp that fails to divide n_kv_heads")
+    kw = dict(max_slots=2, page_size=8, n_pages=32, max_len=48)
+    sp = SamplingParams(max_new_tokens=6, temperature=0.0)
+
+    def serve(mesh):
+        eng = ContinuousBatchingEngine(gqa, gparams, mesh=mesh, **kw)
+        ids = [eng.add_request(p, sampling=sp).req_id
+               for p in _prompts(2, seed=9)]
+        outs = {}
+        while len(outs) < len(ids):
+            for r in eng.step():
+                outs[r.req_id] = list(r.output_tokens)
+        return [outs[i] for i in ids], eng
+
+    base, _ = serve(None)
+    out, eng = serve(_mesh(tp))
+    assert out == base
+    assert eng.tp == tp and eng.kv.kv_shard == 1
+    eng.kv.check_shards()
