@@ -88,15 +88,26 @@ Emits BENCH_serving.json:
                               "survivors": ..., "agreement": 1.0,
                               "restores": 0, "leaked_pages": 0}, ...]},
    "tp": [{"tp": 8, "kv_shard": 8, "agreement_vs_tp1": 1.0,
+           "kernel_tok_s": ..., "kernel_agreement": 1.0,
+           "kernel_dispatches": ..., "dense_fallbacks": 0,
            "allreduce_bytes_per_token": ...,
            "hbm_shard_bytes": {"weight_bytes": ..., "kv_bytes": ...,
-                               "weight_kv_bytes": ..., "allreduce_bytes": ...},
+                               "weight_kv_bytes": ..., "kv_gather_bytes": ...,
+                               "allreduce_bytes": ...},
+           "hbm_kernel_shard_bytes": {...},
            "cim_shard_bytes": {...}, "calibration": {...}, ...}, ...],
+   "replicas": {"rows": [{"n_replicas": 2, "req_s": ..., "tok_s": ...,
+                          "agreement_vs_r1": 1.0, ...}, ...],
+                "affinity": {"affinity": {"router": {...},
+                                          "prefix_hit_tokens": ...},
+                             "round_robin": {...}},
+                "config": {...}},
    "outputs_match": true}
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
       (--tp-only + XLA_FLAGS=--xla_force_host_platform_device_count=8 runs
-      just the tensor-parallel sweep and merges the `tp` section into --out)
+      just the tensor-parallel sweep and merges the `tp` section into --out;
+      --replicas-only likewise merges just the `replicas` section)
 """
 
 from __future__ import annotations
@@ -616,10 +627,11 @@ def run_tp_sweep(*, tps=(1, 2, 4, 8), prompt_len=24, new_tokens=8,
         jax.random.PRNGKey(900 + i), (prompt_len,), 0, TP_CFG.vocab))
         for i in range(n_requests)]
 
-    def run(mesh, cost):
+    def run(mesh, cost, kernel=False):
         eng = ContinuousBatchingEngine(
             TP_CFG, params, max_slots=max_slots, page_size=8,
-            max_len=max_len, chunk_size=16, cost_model=cost, mesh=mesh)
+            max_len=max_len, chunk_size=16, cost_model=cost, mesh=mesh,
+            use_paged_kernel=kernel)
         reqs = [eng.add_request(p, SamplingParams(
             max_new_tokens=new_tokens, temperature=0.0)) for p in prompts]
         t0 = time.perf_counter()
@@ -642,23 +654,41 @@ def run_tp_sweep(*, tps=(1, 2, 4, 8), prompt_len=24, new_tokens=8,
                   f"device_count=8)")
             continue
         mesh = None if tp == 1 else make_host_mesh(model=tp)
-        hbm = HBMCostModel.from_model_config(TP_CFG, kv_dtype="fp32", tp=tp)
+        # the dense path materializes the gathered KV span before attending
+        # — price that re-read at a quarter of the stream; the kernel twin
+        # (paged_kernel=True) fuses the gather away and drops the factor
+        hbm = HBMCostModel.from_model_config(TP_CFG, kv_dtype="fp32", tp=tp,
+                                             kv_gather_overhead=0.25)
         cim = CIMCostModel(TP_CFG, strategy="sparse", seq_len=prompt_len,
-                           tp=tp)
+                           tp=tp, kv_gather_overhead=0.25)
+        hbm_k = HBMCostModel.from_model_config(
+            TP_CFG, kv_dtype="fp32", tp=tp, paged_kernel=True,
+            kv_gather_overhead=0.25)
         run(mesh, hbm)                       # warm: jit compiles per mesh
         eng, outs, wall = run(mesh, hbm)
         if base is None:
             base = outs
         agree = float(np.mean(outs == base))
         cal = eng.calibration.report()
+        # the same cell through the shard-mapped span kernel (interpret
+        # mode on CPU — the tok/s is an emulation number, recorded for the
+        # dispatch-counter and token-identity story, not as a perf claim)
+        run(mesh, hbm_k, kernel=True)        # warm the kernel path
+        keng, kouts, kwall = run(mesh, hbm_k, kernel=True)
         row = {
             "tp": tp,
             "kv_shard": eng.kv.kv_shard,
             "n_pages": eng.pool_host.n_pages,
             "tok_s": eng.stats["tokens_out"] / wall,
+            "kernel_tok_s": keng.stats["tokens_out"] / kwall,
+            "kernel_agreement": float(np.mean(kouts == base)),
+            "kernel_dispatches": keng.stats["kernel_dispatches"],
+            "dense_fallbacks": keng.stats["dense_fallbacks"],
             "agreement_vs_tp1": agree,
             "allreduce_bytes_per_token": hbm.allreduce_bytes_per_token,
             "hbm_shard_bytes": hbm.shard_decode_bytes_per_token(
+                avg_ctx, n_seqs=max_slots),
+            "hbm_kernel_shard_bytes": hbm_k.shard_decode_bytes_per_token(
                 avg_ctx, n_seqs=max_slots),
             "cim_shard_bytes": cim.shard_decode_bytes_per_token(
                 avg_ctx, n_seqs=max_slots),
@@ -667,10 +697,154 @@ def run_tp_sweep(*, tps=(1, 2, 4, 8), prompt_len=24, new_tokens=8,
         rows.append(row)
         print(f"  [tp={tp}] kv_shard={row['kv_shard']} "
               f"agreement={agree:.1%} "
+              f"kernel agreement={row['kernel_agreement']:.1%} "
+              f"(dispatches={row['kernel_dispatches']}) "
               f"hbm weight+kv/shard={row['hbm_shard_bytes']['weight_kv_bytes']:.0f}B "
               f"cim weight+kv/shard={row['cim_shard_bytes']['weight_kv_bytes']:.0f}B "
               f"allreduce={row['allreduce_bytes_per_token']:.0f}B/tok")
     return rows
+
+
+def run_replicas_sweep(*, n_replicas=(1, 2, 4), n_requests=24, families=5,
+                       prompt_len=24, new_tokens=8, max_slots=4):
+    """Part 8: data-parallel engine replicas behind prefix-affinity routing.
+
+    Throughput: the same ``n_requests`` greedy request set (drawn from
+    ``families`` shared 16-token stems) is served by ``ReplicatedEngine``
+    at each replica count; every replica is a full fixed-capacity engine
+    (``max_slots`` each) priced by the HBM cost model.  The headline
+    number is the MODELED makespan — ``max`` over replicas of the
+    accumulated per-step ``sim_latency_ns`` — because that is what R-way
+    replication means in deployment (each replica owns its accelerator;
+    requests/s = n / slowest replica's busy time).  The router's load
+    balance is exactly what this measures: dump every request on one
+    replica and the makespan doesn't move.  Wall clock is also recorded,
+    but on the CI host every "replica" shares one CPU execution stream
+    (forced host devices serialize), so wall clock cannot express R-way
+    hardware and is NOT asserted on.  Outputs must be token-identical to
+    R=1 (routing may move a request, never change its tokens).
+
+    Affinity: at R=2 the same families arrive STAGGERED (two router steps
+    between arrivals, so the leader's prefix pages commit before the next
+    family member routes) under affinity vs round_robin routing; the row
+    records router hit counters and the pooled trie prefix_hit_tokens both
+    ways — affinity must concentrate the families (more hit tokens).
+    ``families`` is odd on purpose: an even family count inter-locks with
+    the R=2 round-robin stride and accidentally keeps families
+    replica-aligned, hiding the routing difference."""
+    from repro.serving import ReplicatedEngine
+
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    cost = _cost_model("hbm", seq_len=prompt_len)
+    rng = np.random.RandomState(17)
+    stems = [list(map(int, rng.randint(1, CFG.vocab - 1, 16)))
+             for _ in range(families)]
+    prompts = [stems[i % families]
+               + list(map(int, rng.randint(1, CFG.vocab - 1,
+                                           prompt_len - 16)))
+               for i in range(n_requests)]
+    sp = SamplingParams(max_new_tokens=new_tokens, temperature=0.0)
+    kw = dict(max_slots=max_slots, page_size=8, cost_model=cost,
+              max_len=prompt_len + new_tokens + 8)
+
+    def serve(r, routing="affinity"):
+        eng = ReplicatedEngine(CFG, params, n_replicas=r, routing=routing,
+                               **kw)
+        ids = [eng.add_request(p, sampling=sp).req_id for p in prompts]
+        t0 = time.perf_counter()
+        fin = eng.serve_all()
+        wall = time.perf_counter() - t0
+        outs = {q.req_id: list(q.output_tokens) for q in fin}
+        for rep in eng.replicas:
+            rep.pool_host.check_invariants()
+        return [outs[i] for i in ids], wall, eng
+
+    serve(max(n_replicas))                      # warm: jit compiles
+    rows, base = [], None
+    for r in n_replicas:
+        outs, wall, eng = serve(r)
+        if base is None:
+            base = outs
+        agg = eng.stats()["aggregate"]
+        makespan_s = max(rep.stats["sim_latency_ns"]
+                         for rep in eng.replicas) / 1e9
+        row = {
+            "n_replicas": r,
+            "sim_makespan_ms": makespan_s * 1e3,
+            "req_s_model": n_requests / makespan_s,
+            "tok_s_model": agg["tokens_out"] / makespan_s,
+            "req_s_wall": n_requests / wall,
+            "agreement_vs_r1": float(np.mean([a == b for a, b
+                                              in zip(outs, base)])),
+            "finished": agg["finished"],
+            "per_replica_sim_ms": [rep.stats["sim_latency_ns"] / 1e6
+                                   for rep in eng.replicas],
+        }
+        rows.append(row)
+        print(f"  [R={r}] modeled {row['req_s_model']:8.1f} req/s "
+              f"(makespan {row['sim_makespan_ms']:6.2f}ms, "
+              f"speedup {row['req_s_model'] / rows[0]['req_s_model']:.2f}x) "
+              f"wall {row['req_s_wall']:6.1f} req/s "
+              f"agreement={row['agreement_vs_r1']:.0%}")
+
+    # affinity vs round_robin under staggered arrivals (warm tries)
+    def staggered(routing):
+        eng = ReplicatedEngine(CFG, params, n_replicas=2, routing=routing,
+                               **kw)
+        done = 0
+        for p in prompts:
+            eng.add_request(p, sampling=sp)
+            for _ in range(2):
+                done += len(eng.step())
+        done += len(eng.serve_all())
+        assert done == n_requests
+        hit = sum(rep.pool_host.stats().prefix_hit_tokens
+                  for rep in eng.replicas)
+        return eng.stats()["router"], hit
+
+    aff_router, aff_hits = staggered("affinity")
+    rr_router, rr_hits = staggered("round_robin")
+    affinity = {
+        "affinity": {"router": aff_router, "prefix_hit_tokens": aff_hits},
+        "round_robin": {"router": rr_router, "prefix_hit_tokens": rr_hits},
+    }
+    print(f"  affinity vs round_robin (R=2, staggered): "
+          f"hits={aff_router['router.affinity_hits']}"
+          f"/{aff_router['router.routed']}, trie hit tokens "
+          f"{rr_hits} -> {aff_hits}")
+    return {"rows": rows, "affinity": affinity,
+            "config": {"n_requests": n_requests, "families": families,
+                       "max_slots": max_slots, "prompt_len": prompt_len,
+                       "new_tokens": new_tokens}}
+
+
+def assert_replicas_acceptance(rep):
+    """Acceptance for the ``replicas`` section: 100% greedy agreement at
+    every replica count; >=1.7x modeled request throughput at R=2 and
+    >=2.5x at R=4 (the makespan is the SLOWEST replica's busy time, so
+    these bounds are really load-balance assertions on the router — a
+    skewed placement fails them); affinity routing must beat round_robin
+    on pooled trie hit tokens with honest hit accounting."""
+    rows = {r["n_replicas"]: r for r in rep["rows"]}
+    assert rows[1]["agreement_vs_r1"] == 1.0
+    for r, row in rows.items():
+        assert row["agreement_vs_r1"] == 1.0, (r, row)
+    if 2 in rows:
+        speed2 = rows[2]["req_s_model"] / rows[1]["req_s_model"]
+        assert speed2 >= 1.7, f"R=2 modeled speedup {speed2:.2f}x < 1.7x"
+    if 4 in rows:
+        speed4 = rows[4]["req_s_model"] / rows[1]["req_s_model"]
+        assert speed4 >= 2.5, f"R=4 modeled speedup {speed4:.2f}x < 2.5x"
+    aff = rep["affinity"]["affinity"]
+    rr = rep["affinity"]["round_robin"]
+    assert aff["router"]["router.affinity_hits"] > 0, aff
+    assert aff["router"]["router.affinity_hits"] <= \
+        aff["router"]["router.routed"], aff
+    assert aff["prefix_hit_tokens"] > rr["prefix_hit_tokens"], (aff, rr)
+    print(f"replicas sweep: R=2 modeled speedup "
+          f"{rows[2]['req_s_model'] / rows[1]['req_s_model']:.2f}x, 100% "
+          f"greedy agreement, affinity hit tokens "
+          f"{rr['prefix_hit_tokens']} -> {aff['prefix_hit_tokens']}")
 
 
 def assert_tp_acceptance(rows):
@@ -688,6 +862,13 @@ def assert_tp_acceptance(rows):
         assert r["allreduce_bytes_per_token"] > 0, r
         assert r["calibration"]["n"] > 0, r
         assert math.isfinite(r["calibration"]["scale"]), r
+        # the shard-mapped span kernel ran every mixed step of its twin
+        # cell and reproduced the tp=1 anchor tokens
+        assert r["kernel_dispatches"] > 0 and r["dense_fallbacks"] == 0, r
+        assert r["kernel_agreement"] >= 0.95, r
+        # kernel pricing fuses the gather: strictly less re-read traffic
+        assert r["hbm_kernel_shard_bytes"]["kv_gather_bytes"] \
+            < r["hbm_shard_bytes"]["kv_gather_bytes"], r
     widest = rows[-1]
     for cm in ("hbm_shard_bytes", "cim_shard_bytes"):
         assert widest[cm]["weight_kv_bytes"] < base[cm]["weight_kv_bytes"], \
@@ -908,7 +1089,26 @@ def main():
                          "`tp` section into --out (the CI tp job runs this "
                          "under XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8)")
+    ap.add_argument("--replicas-only", action="store_true",
+                    help="run ONLY the data-parallel replica sweep and "
+                         "merge its `replicas` section into --out")
     args = ap.parse_args()
+
+    if args.replicas_only:
+        print("replicas sweep:")
+        rep = run_replicas_sweep(new_tokens=min(args.new_tokens, 8))
+        try:
+            with open(args.out) as f:
+                payload = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            payload = {"bench": "serving_throughput"}
+        payload["replicas"] = rep
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out} (replicas section, {len(rep['rows'])} "
+              f"cells)")
+        assert_replicas_acceptance(rep)
+        return
 
     if args.tp_only:
         print("tp sweep:")
@@ -957,6 +1157,8 @@ def main():
         print("tp sweep (smoke):")
         tp_rows = run_tp_sweep(n_requests=4, max_slots=2,
                                new_tokens=new_tokens)
+        print("replicas sweep (smoke):")
+        replicas = run_replicas_sweep(new_tokens=new_tokens)
     else:
         results, m1 = run_throughput(params, (1, 2, 4, 8), prompt_len=16,
                                      new_tokens=args.new_tokens)
@@ -984,11 +1186,14 @@ def main():
             max_slots=4, chunk=16)
         print("tp sweep:")
         tp_rows = run_tp_sweep(new_tokens=min(args.new_tokens, 8))
+        print("replicas sweep:")
+        replicas = run_replicas_sweep(new_tokens=min(args.new_tokens, 8))
     all_match = m1 and m2 and m3
     payload = {"bench": "serving_throughput", "smoke": args.smoke,
                "results": results, "chunked": chunked, "prefix": prefix,
                "kv_quant": kv_quant, "telemetry": telemetry,
                "robustness": robustness, "tp": tp_rows,
+               "replicas": replicas,
                "outputs_match": all_match}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -1060,6 +1265,9 @@ def main():
     # acceptance (tp): binds only when >1 tp cell ran (the forced-device
     # CI tp job); the single-device tier-1 job records the tp=1 anchor
     assert_tp_acceptance(tp_rows)
+    # acceptance (replicas): 100% greedy agreement across replica counts,
+    # >=1.7x request throughput at R=2, affinity beats round_robin
+    assert_replicas_acceptance(replicas)
     at8 = [r for r in results if r["concurrency"] == 8]
     if at8:
         print(f"speedup at 8 concurrent: {at8[0]['speedup']:.2f}x")

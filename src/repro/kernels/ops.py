@@ -132,5 +132,47 @@ def dispatch_cache_info():
     return _dispatch.cache_info()
 
 
+# why a span step stayed on the dense-gather path ("kernel" = it didn't)
+PAGED_DISPATCH_REASONS = ("kernel", "disabled", "softcap", "gqa_replicated",
+                          "vmem")
+
+
+@functools.lru_cache(maxsize=None)
+def paged_dispatch(span: int, n_heads: int, head_dim: int, page_size: int,
+                   n_kv_heads: int, kv_bytes: float, *,
+                   quantized: bool = False, tp: int = 1, kv_shard: int = 1,
+                   paged_kernel: bool = True,
+                   softcap: bool = False) -> str:
+    """THE kernel-vs-dense decision for one paged-attention span step.
+
+    Returns ``"kernel"`` when the Pallas span kernel runs, else the reject
+    reason (one of :data:`PAGED_DISPATCH_REASONS`): ``"disabled"`` — the
+    model config never asked for it; ``"softcap"`` — logit soft-capping has
+    no kernel implementation; ``"gqa_replicated"`` — a >1 "model" axis with
+    a replicated KV pool (``kv_shard`` 1, i.e. ``n_kv_heads`` or
+    ``n_heads`` not divisible by ``tp``), where only the dense gather
+    partitions on the query-head axis; ``"vmem"`` — one grid step's working
+    set spills :func:`paged_span_fits`.
+
+    ``models.layers._paged_attend`` consults this at trace time and the
+    serving engine re-derives the same decision per step for its dispatch
+    counters — keeping the two in lockstep is the whole point of the shared
+    helper.  At ``tp`` > 1 the fit is the honest PER-SHARD working set:
+    query/scratch/output terms at ``n_heads / kv_shard`` heads, KV-side
+    terms divided through ``n_shards=kv_shard``.
+    """
+    if not paged_kernel:
+        return "disabled"
+    if softcap:
+        return "softcap"
+    if tp > 1 and kv_shard != tp:
+        return "gqa_replicated"
+    shard = max(kv_shard, 1)
+    fits = paged_span_fits(
+        span, n_heads // shard, head_dim, page_size, n_kv_heads, kv_bytes,
+        scale_bytes=2 * 4 * n_kv_heads if quantized else 0, n_shards=shard)
+    return "kernel" if fits else "vmem"
+
+
 __all__ = ["monarch_mm", "monarch_mm_q", "bdmm_mm", "paged_span_fits",
-           "dispatch_cache_info"]
+           "paged_dispatch", "PAGED_DISPATCH_REASONS", "dispatch_cache_info"]

@@ -237,4 +237,91 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return out[:, 0]
 
 
-__all__ = ["paged_attention", "paged_attention_span"]
+def paged_attention_span_sharded(q: jax.Array, k_pages: jax.Array,
+                                 v_pages: jax.Array, page_table: jax.Array,
+                                 start: jax.Array, span_len: jax.Array,
+                                 window: jax.Array, mesh: jax.sharding.Mesh,
+                                 k_scales: Optional[jax.Array] = None,
+                                 v_scales: Optional[jax.Array] = None,
+                                 axis: str = "model") -> jax.Array:
+    """Span kernel under tensor parallelism: ``shard_map`` over ``axis``.
+
+    Pallas custom calls don't partition under GSPMD — traced inside a >1
+    "model" mesh the plain :func:`paged_attention_span` would force an
+    all-gather of the sharded page buffers.  ``shard_map`` sidesteps GSPMD
+    entirely: each shard runs the SAME kernel on its local KV-head slice of
+    the page pool (q heads, page KV rows and scale rows all split on the
+    head axis; grid, page table and flash loop unchanged), and no
+    collective is needed because attention heads never mix — outputs
+    concatenate on the head axis, which is exactly the sharding the
+    surrounding layer keeps q in.  The page axis is never sharded (the
+    ``DeviceKV`` contract), so every shard sees the full page table and its
+    span writes stay shard-local.
+
+    Arguments are as in :func:`paged_attention_span`, plus the engine mesh.
+    Shapes are GLOBAL; the per-shard kernel sees ``H / tp`` query heads and
+    ``KV / tp`` page heads, so both must divide by the ``axis`` size (the
+    caller gates on that — GQA-replicated pools stay on the dense path).
+    Mesh axes other than ``axis`` (the "data" axis) are untouched: inputs
+    are replicated over them and each slice computes identical outputs.
+    ``check_rep=False`` because pallas_call defeats shard_map's replication
+    checker, not because anything is unreplicated."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be given together")
+    tp = dict(mesh.shape)[axis]
+    if q.shape[2] % tp or k_pages.shape[2] % tp:
+        raise ValueError(
+            f"heads {q.shape[2]}/KV {k_pages.shape[2]} must divide the "
+            f"{axis!r} axis size {tp}")
+    heads = P(None, None, axis, None)
+    rep = P()
+    win = jnp.asarray(window, jnp.int32)
+    interp = _interpret()
+
+    if k_scales is not None:
+        def body(q, kp, vp, ks, vs, pt, st, sp, wn):
+            return _paged_attention_span_q(q, kp, vp, ks, vs, pt, st, sp,
+                                           wn, interpret=interp)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(heads, heads, heads, P(None, axis),
+                                 P(None, axis), rep, rep, rep, rep),
+                       out_specs=heads, check_rep=False)
+        return fn(q, k_pages, v_pages, k_scales, v_scales,
+                  page_table.astype(jnp.int32), start.astype(jnp.int32),
+                  span_len.astype(jnp.int32), win)
+
+    def body(q, kp, vp, pt, st, sp, wn):
+        return _paged_attention_span(q, kp, vp, pt, st, sp, wn,
+                                     interpret=interp)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(heads, heads, heads, rep, rep, rep, rep),
+                   out_specs=heads, check_rep=False)
+    return fn(q, k_pages, v_pages, page_table.astype(jnp.int32),
+              start.astype(jnp.int32), span_len.astype(jnp.int32), win)
+
+
+def paged_attention_sharded(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, page_table: jax.Array,
+                            lengths: jax.Array, window: jax.Array,
+                            mesh: jax.sharding.Mesh,
+                            k_scales: Optional[jax.Array] = None,
+                            v_scales: Optional[jax.Array] = None,
+                            axis: str = "model") -> jax.Array:
+    """Single-query decode under tensor parallelism (span of 1 per row),
+    mirroring :func:`paged_attention` over :func:`paged_attention_span_sharded`."""
+    B = q.shape[0]
+    out = paged_attention_span_sharded(
+        q[:, None], k_pages, v_pages, page_table,
+        lengths.astype(jnp.int32) - 1, jnp.ones((B,), jnp.int32),
+        jnp.asarray(window), mesh, k_scales=k_scales, v_scales=v_scales,
+        axis=axis)
+    return out[:, 0]
+
+
+__all__ = ["paged_attention", "paged_attention_span",
+           "paged_attention_sharded", "paged_attention_span_sharded"]

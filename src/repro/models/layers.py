@@ -404,37 +404,55 @@ def _paged_attend(q, k, v, cache, page_table, q_pos, cfg: ModelConfig,
         vp = vp.at[phys, off].set(v.astype(vp.dtype))
         new_cache = {"k_pages": kp, "v_pages": vp}
 
-    # tensor-parallel trace? Pallas custom calls don't partition under
-    # GSPMD, so with a >1 "model" axis active the span kernel would force
-    # an all-gather of the sharded pages; the dense-gather path below
-    # instead partitions naturally on the KV-head axis.  (A future
-    # shard_map'd kernel would pass its per-shard KV count via the honest
-    # ``n_shards`` knob on ``paged_span_fits``.)
+    # kernel-vs-dense dispatch: ONE shared, cached decision
+    # (``kernels.ops.paged_dispatch`` — the serving engine re-derives the
+    # same call per step for its dispatch counters).  Under a >1 "model"
+    # axis the kernel runs shard_mapped: each shard keeps its local KV-head
+    # slice of the page buffers and scale rows (the page axis is never
+    # sharded, so span writes stay shard-local per the DeviceKV contract),
+    # and the VMEM fit is the honest per-shard working set via
+    # ``paged_span_fits(n_shards=kv_shard)``.  A GQA-replicated pool
+    # (``kv_shard`` 1 at tp > 1) stays on the dense gather below, which
+    # partitions on the query-head axis instead.
     mesh = current_mesh()
     tp = 1 if mesh is None else dict(mesh.shape).get("model", 1)
+    KV = kp.shape[2]
+    H = q.shape[2]
+    kv_shard = tp if tp > 1 and KV % tp == 0 and H % tp == 0 else 1
 
-    if cfg.paged_kernel and cfg.logit_softcap is None and tp == 1:
-        from repro.kernels.ops import paged_span_fits
+    from repro.kernels.ops import paged_dispatch
+
+    decision = paged_dispatch(
+        S, H, q.shape[3], pg, KV, kp.dtype.itemsize, quantized=quantized,
+        tp=tp, kv_shard=kv_shard, paged_kernel=cfg.paged_kernel,
+        softcap=cfg.logit_softcap is not None)
+    if decision == "kernel":
         from repro.kernels.paged import (  # lazy: optional path
-            paged_attention, paged_attention_span)
+            paged_attention, paged_attention_sharded, paged_attention_span,
+            paged_attention_span_sharded)
 
-        KV = kp.shape[2]
-        fits = paged_span_fits(
-            S, q.shape[2], q.shape[3], pg, KV, kp.dtype.itemsize,
-            scale_bytes=2 * 4 * KV if quantized else 0)
-        if fits:
-            win = jnp.asarray(
-                1_000_000_000 if window is None else window, jnp.int32)
-            if S == 1 and span_len is None:
+        win = jnp.asarray(
+            1_000_000_000 if window is None else window, jnp.int32)
+        if S == 1 and span_len is None:
+            if tp > 1:
+                out = paged_attention_sharded(q[:, 0], kp, vp, page_table,
+                                              q_pos[:, 0] + 1, win, mesh,
+                                              k_scales=ks, v_scales=vs)
+            else:
                 out = paged_attention(q[:, 0], kp, vp, page_table,
                                       q_pos[:, 0] + 1, win,
                                       k_scales=ks, v_scales=vs)
-                return out[:, None], new_cache
-            sp = jnp.full((B,), S, jnp.int32) if span_len is None else span_len
-            out = paged_attention_span(q, kp, vp, page_table, q_pos[:, 0], sp,
-                                       win, k_scales=ks, v_scales=vs)
-            return out, new_cache
-        # else: the span block spills VMEM — dense-gather fallback below
+            return out[:, None], new_cache
+        sp = jnp.full((B,), S, jnp.int32) if span_len is None else span_len
+        if tp > 1:
+            out = paged_attention_span_sharded(q, kp, vp, page_table,
+                                               q_pos[:, 0], sp, win, mesh,
+                                               k_scales=ks, v_scales=vs)
+        else:
+            out = paged_attention_span(q, kp, vp, page_table, q_pos[:, 0],
+                                       sp, win, k_scales=ks, v_scales=vs)
+        return out, new_cache
+    # else: dense-gather fallback below (the engine counts the reason)
 
     MP = page_table.shape[1]
     KVh = kp.shape[2:]

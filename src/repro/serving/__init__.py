@@ -30,7 +30,13 @@ KV pool — the paper's per-array weight/KV residency, software edition):
   * WRITES STAY LOCAL: span writes and COW copies scatter on the page
     axis, which is never sharded — every shard performs the same
     page-granular operation on its local KV-head slice, no cross-shard
-    traffic.
+    traffic.  The same locality is what lets the Pallas span kernel run
+    shard_mapped at ``tp > 1``: each shard executes the identical kernel
+    grid over its local KV-head slice of the page buffers and scale rows
+    (``kernels/paged.py::paged_attention_span_sharded``), with the honest
+    per-shard VMEM fit through ``paged_span_fits(n_shards=kv_shard)``.
+    Only GQA-replicated pools (``kv_shard == 1``) fall back to the dense
+    gather, which partitions on the query-head axis.
   * SNAPSHOTS ARE MESH-INDEPENDENT: ``DeviceKV.export`` gathers shards,
     ``DeviceKV.load`` re-shards onto the restoring mesh, and
     ``DeviceKV.check_shards`` is the per-shard recovery invariant.
@@ -174,6 +180,12 @@ Module map:
                  (``prefill_ns(n, cached_tokens=...)``) — ``HBMCostModel``
                  (weight-streaming roofline) and ``CIMCostModel`` (priced
                  by the paper's CIM simulator).
+  replicas.py  — ``ReplicatedEngine``: R independent engine replicas
+                 behind a shared admission point with prefix-trie
+                 affinity routing (``match_prefix`` scored per replica,
+                 least-loaded fallback, ``routing="round_robin"``
+                 baseline), fanned metrics, per-replica snapshots — see
+                 its module docstring for the router/affinity contract.
   engine.py    — ``ContinuousBatchingEngine``: ONE jitted mixed step over
                  (slot, span) with on-device sampling, lagged token
                  harvest, trie lookup at ``add_request``, prefix acquire +
@@ -198,7 +210,13 @@ Module map:
 The span-aware Pallas paged-gather attention kernel lives in
 ``kernels/paged.py`` (oracles: ``kernels/ref.py::paged_attention_span_ref``
 / ``paged_attention_ref``); enable it with
-``ContinuousBatchingEngine(..., use_paged_kernel=True)``.
+``ContinuousBatchingEngine(..., use_paged_kernel=True)``.  It runs at any
+``tp``: single-device as a plain pallas_call, under a >1 "model" axis
+shard_mapped per KV-head slice (bitwise-identical outputs either way).
+The kernel-vs-dense decision is ``kernels/ops.py::paged_dispatch`` —
+consulted at trace time by ``models/layers.py`` and re-derived per step by
+the engine, which counts it in ``stats`` (``kernel_dispatches``,
+``dense_fallbacks`` and ``dense_fallback_<reason>``).
 
 KV pages are stored at the engine's ``kv_dtype`` ("fp32" | "bf16" |
 "int8"; None = model dtype).  int8 pools quantize fresh spans on device
@@ -223,6 +241,8 @@ from repro.serving.kv_pool import (PagedKVPool, PoolOOM,  # noqa: F401
 from repro.serving.metrics import (Calibration, Counter,  # noqa: F401
                                    EngineStats, Gauge, Histogram,
                                    MetricsRegistry, render_report)
+from repro.serving.replicas import (ReplicatedEngine,  # noqa: F401
+                                    ROUTING_POLICIES)
 from repro.serving.request import (FinishReason, Request,  # noqa: F401
                                    RequestState, SamplingParams, Sequence)
 from repro.serving.scheduler import (CIMCostModel, CostModel,  # noqa: F401

@@ -543,6 +543,8 @@ class ContinuousBatchingEngine:
             finished.append(req)
         if plan.degraded:
             self.stats["degraded_chunks"] += plan.degraded
+        if plan.prefix_deferred:
+            self.stats["prefix_deferrals"] += plan.prefix_deferred
 
         spans = list(plan.spans)
         # reserve the mandatory decodes' pages BEFORE admissions touch the
@@ -668,6 +670,7 @@ class ContinuousBatchingEngine:
         req.mark(reason.value, now)
         req.finish(reason, self.step_idx, now)
         self.stats[self._ABORT_COUNTER[reason]] += 1
+        self.stats["finished"] += 1
         self.tracer.instant("abort", req_id=req.req_id, reason=reason.value)
 
     def run(self) -> list[Request]:
@@ -905,6 +908,17 @@ class ContinuousBatchingEngine:
         self.stats["sim_energy_nj"] += nrg
         self.stats["mixed_steps"] += 1
 
+        # kernel-dispatch observability: re-derive the SAME cached decision
+        # the traced step took for this span bucket (kernels.ops holds the
+        # one decision function), so the tp>1 kernel win — and any silent
+        # VMEM-spill regression when a bucket grows — shows up in stats
+        decision = self._kernel_decision(Sb)
+        if decision == "kernel":
+            self.stats["kernel_dispatches"] += 1
+        else:
+            self.stats["dense_fallbacks"] += 1
+            self.stats[f"dense_fallback_{decision}"] += 1
+
         if self.metrics_enabled or self.tracer.enabled:
             # per-iteration batch composition + pool pressure.  stats() is a
             # full pool scan, but pools are a few hundred pages at most and
@@ -930,6 +944,27 @@ class ContinuousBatchingEngine:
             self._keys)
         self._pending.append({"sampled": sampled, "slots": harvest,
                               "step": self.step_idx})
+
+    def _kernel_decision(self, span: int) -> str:
+        """The kernel-vs-dense decision the traced mixed step took for this
+        span bucket — ``kernels.ops.paged_dispatch`` with exactly the
+        arguments ``models.layers._paged_attend`` derives from the traced
+        shapes, so the counters can never drift from the compiled path.
+        (Both calls hit the same ``lru_cache`` entry; this is a dict lookup
+        per step, not a recomputation.)"""
+        from repro.core.quant import KV_DTYPE_BYTES
+        from repro.kernels.ops import paged_dispatch
+
+        cfg = self.cfg
+        kv_shard = (self.tp if self.tp > 1
+                    and cfg.n_kv_heads % self.tp == 0
+                    and cfg.n_heads % self.tp == 0 else 1)
+        return paged_dispatch(
+            span, cfg.n_heads, cfg.hd, self.page_size, cfg.n_kv_heads,
+            KV_DTYPE_BYTES[self.kv_dtype],
+            quantized=self.kv_dtype == "int8", tp=self.tp,
+            kv_shard=kv_shard, paged_kernel=cfg.paged_kernel,
+            softcap=cfg.logit_softcap is not None)
 
     def _harvest(self, entry: dict) -> list[Request]:
         step = entry.get("step", -1)
@@ -973,6 +1008,7 @@ class ContinuousBatchingEngine:
         elif len(req.output_tokens) >= sp.max_new_tokens:
             req.finish(FinishReason.LENGTH, self.step_idx, now)
         if req.state is RequestState.FINISHED:
+            self.stats["finished"] += 1
             if self.metrics_enabled:
                 self._h_e2e.observe((now - req.t_arrival) * 1e3)
             self._evict(seq)

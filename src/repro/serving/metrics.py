@@ -250,7 +250,20 @@ ENGINE_COUNTER_KEYS = (
     # expiries, admission-control sheds, degraded (pressure-capped) prefill
     # chunks, recovered dispatch failures, snapshot/restore events.
     "aborts", "timeouts", "sheds", "degraded_chunks",
-    "dispatch_failures", "snapshots", "restores")
+    "dispatch_failures", "snapshots", "restores",
+    # terminal transitions of any flavor (EOS/LENGTH + the abort family) —
+    # what the replica router sums for its aggregate view
+    "finished",
+    # kernel-dispatch observability (PR 9): per-step kernel-vs-dense
+    # decisions for the paged-attention span (``kernels.ops.paged_dispatch``
+    # re-derived by the engine), dense fallbacks split by reject reason as
+    # ``dense_fallback_<reason>`` counters, and trie-aware admission
+    # deferrals (a WAITING request parked one plan so a prefix leader
+    # commits the shared pages it will then admit against).
+    "kernel_dispatches", "dense_fallbacks",
+    "dense_fallback_disabled", "dense_fallback_softcap",
+    "dense_fallback_gqa_replicated", "dense_fallback_vmem",
+    "prefix_deferrals")
 
 
 class EngineStats(MutableMapping):

@@ -1,0 +1,247 @@
+"""Data-parallel serving: R engine replicas behind one admission router.
+
+Tensor parallelism (PR 8 + the shard-mapped span kernel) scales ONE
+engine's step; this layer scales REQUEST throughput by running
+``n_replicas`` independent :class:`ContinuousBatchingEngine` instances —
+each with its own KV pool, prefix trie, scheduler and jitted step — behind
+a shared admission point that routes every request once, at intake.  It is
+the serving-side use of the mesh's "data" axis the PR 8 plumbing left
+open: replicas correspond to data slices (or simply to extra host
+parallelism on one device — jax's async dispatch overlaps the replicas'
+device work either way).
+
+Router / affinity contract
+==========================
+
+* **Who owns the shared queue.** The router does — but only up to the
+  routing decision.  ``add_request`` picks a replica *immediately* and
+  hands the request to that replica's own waiting queue; there is no
+  router-side holding pen, so every queue invariant (FIFO order,
+  priorities, shedding budgets, deadline sweeps, preemption re-queueing)
+  keeps exactly one owner: the replica engine.  The router records
+  ``req_id -> replica`` and forwards ``cancel``; requests it never saw
+  (added directly on a replica) still cancel through that replica.
+
+* **Routing policy.** ``routing="affinity"`` (default) scores each replica
+  by ``pool_host.match_prefix(prompt).n_tokens`` — a pure trie lookup, no
+  pool mutation — and sends the request to the replica already holding the
+  longest committed prefix (ties broken toward the least-loaded, then the
+  lowest index).  A zero-score prompt falls back to the least-loaded
+  replica.  ``routing="round_robin"`` bypasses scoring (the benchmark
+  baseline).  ``router.affinity_hits`` counts only routings where the
+  winning score was a real, positive trie match, so it can never exceed
+  the number of actual trie matches.
+
+* **How replica-local tries diverge.** Prefix pages commit to the trie of
+  whichever replica computed them, and replicas never exchange pages — so
+  the tries drift apart by construction, and affinity routing is what
+  keeps the drift USEFUL: repeats of a prompt family land where the family
+  already lives, concentrating (rather than replicating) the cache.  The
+  cross-replica hit rate is therefore workload-dependent; the in-replica
+  hit semantics (COW, refcounts, eviction) are untouched.
+
+* **What snapshot/restore means per replica.** ``snapshot()`` is the list
+  of independent per-replica engine snapshots (each drains its own
+  in-flight dispatch chain first) plus the router's ``req_id -> replica``
+  table and round-robin cursor.  ``restore`` rebuilds each engine through
+  ``ContinuousBatchingEngine.restore`` — a replica's snapshot is exactly
+  an engine snapshot, so single-engine tooling (``restore_latest``, the
+  fault-tolerance supervisor) can adopt any one replica unchanged.
+
+* **Metrics.** Each replica keeps its own registry (its counters stay
+  authoritative); ``sync_metrics`` fans them into the router's single
+  registry under ``replica<i>.`` prefixes next to the ``router.*``
+  counters, and ``stats()`` returns the summed engine counters plus the
+  per-replica breakdown.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.request import FinishReason, Request, SamplingParams
+
+ROUTING_POLICIES = ("affinity", "round_robin")
+
+
+class ReplicatedEngine:
+    """R independent engine replicas behind prefix-affinity admission."""
+
+    def __init__(self, cfg, params, *, n_replicas: int = 2,
+                 routing: str = "affinity", replicas=None, **engine_kw):
+        if routing not in ROUTING_POLICIES:
+            raise ValueError(
+                f"routing must be one of {ROUTING_POLICIES}, got {routing!r}")
+        if replicas is not None:           # restore path: adopt as-is
+            self.replicas = list(replicas)
+        else:
+            if n_replicas < 1:
+                raise ValueError("n_replicas must be >= 1")
+            self.replicas = [
+                ContinuousBatchingEngine(cfg, params, **engine_kw)
+                for _ in range(n_replicas)]
+        self.routing = routing
+        self._owner: dict[int, int] = {}   # req_id -> replica index
+        self._rr = 0                       # round-robin cursor
+        self.registry = MetricsRegistry()
+        c = self.registry.counter
+        self._c_routed = c("router.routed")
+        self._c_affinity = c("router.affinity_hits")
+        self._c_affinity_tokens = c("router.affinity_hit_tokens")
+        self._c_least_loaded = c("router.least_loaded")
+        self._c_round_robin = c("router.round_robin")
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    # -- routing -----------------------------------------------------------
+
+    def _load(self, i: int) -> int:
+        """A replica's unfinished work: queued + resident requests."""
+        rep = self.replicas[i]
+        return len(rep.waiting) + len(rep.running)
+
+    def route(self, prompt) -> tuple[int, int]:
+        """The routing decision for ``prompt`` WITHOUT admitting it:
+        ``(replica_index, matched_tokens)`` where ``matched_tokens`` > 0
+        only for a real affinity hit.  ``add_request`` is exactly this
+        followed by the chosen replica's own ``add_request``; exposing the
+        pure half lets tests verify hit accounting independently."""
+        if self.routing == "round_robin":
+            return self._rr % len(self.replicas), 0
+        toks = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        scores = [rep.pool_host.match_prefix(toks).n_tokens
+                  for rep in self.replicas]
+        best = max(scores)
+        if best > 0:
+            idx = min((i for i, s in enumerate(scores) if s == best),
+                      key=lambda i: (self._load(i), i))
+            return idx, best
+        return min(range(len(self.replicas)),
+                   key=lambda i: (self._load(i), i)), 0
+
+    def add_request(self, prompt, sampling: Optional[SamplingParams] = None,
+                    on_token=None) -> Request:
+        idx, matched = self.route(prompt)
+        self._c_routed.set(self._c_routed.value + 1)
+        if self.routing == "round_robin":
+            self._rr += 1
+            self._c_round_robin.set(self._c_round_robin.value + 1)
+        elif matched > 0:
+            self._c_affinity.set(self._c_affinity.value + 1)
+            self._c_affinity_tokens.set(
+                self._c_affinity_tokens.value + matched)
+        else:
+            self._c_least_loaded.set(self._c_least_loaded.value + 1)
+        req = self.replicas[idx].add_request(prompt, sampling=sampling,
+                                             on_token=on_token)
+        self._owner[req.req_id] = idx
+        return req
+
+    def owner_of(self, req_id: int) -> Optional[int]:
+        """Replica index a routed request lives on (None once finished)."""
+        return self._owner.get(req_id)
+
+    # -- serving loop ------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return any(rep.has_work() for rep in self.replicas)
+
+    def step(self) -> list[Request]:
+        """One router iteration: step every replica that has work (their
+        jitted mixed steps overlap through jax async dispatch — each
+        replica's one-step harvest lag hides the others' host planning),
+        and return all requests finished this call."""
+        finished: list[Request] = []
+        for rep in self.replicas:
+            if rep.has_work():
+                finished.extend(rep.step())
+        for r in finished:
+            self._owner.pop(r.req_id, None)
+        return finished
+
+    def drain(self) -> list[Request]:
+        done: list[Request] = []
+        for rep in self.replicas:
+            done.extend(rep.drain())
+        for r in done:
+            self._owner.pop(r.req_id, None)
+        return done
+
+    def serve_all(self, max_steps: int = 100_000) -> list[Request]:
+        """Step until every queue is empty; returns finish order."""
+        out: list[Request] = []
+        for _ in range(max_steps):
+            if not self.has_work():
+                return out
+            out.extend(self.step())
+        raise RuntimeError(f"replicas did not converge in {max_steps} steps")
+
+    def cancel(self, req_id: int,
+               reason: FinishReason = FinishReason.ABORTED) -> bool:
+        idx = self._owner.get(req_id)
+        if idx is not None:
+            ok = self.replicas[idx].cancel(req_id, reason)
+            if ok:
+                self._owner.pop(req_id, None)
+            return ok
+        # not router-admitted (or already forgotten): try every replica —
+        # a second cancel of a finished id stays a no-op, as on the engine
+        return any(rep.cancel(req_id, reason) for rep in self.replicas)
+
+    # -- observability -----------------------------------------------------
+
+    def sync_metrics(self) -> MetricsRegistry:
+        """Fan every replica counter into the router registry
+        (``replica<i>.<name>``) next to the ``router.*`` counters, and
+        return the registry.  Values are copied, not moved — the replica
+        registries stay authoritative."""
+        for i, rep in enumerate(self.replicas):
+            for m in rep.registry:
+                if m.kind == "counter":
+                    self.registry.counter(f"replica{i}.{m.name}").set(m.value)
+        return self.registry
+
+    def stats(self) -> dict:
+        """Summed engine counters across replicas, the per-replica
+        breakdown, and the router's own counters."""
+        per = [dict(rep.stats.as_dict()) for rep in self.replicas]
+        total: dict = {}
+        for d in per:
+            for k, v in d.items():
+                total[k] = total.get(k, 0) + v
+        router = {m.name: m.value for m in self.registry
+                  if m.kind == "counter" and m.name.startswith("router.")}
+        return {"aggregate": total, "replicas": per, "router": router}
+
+    # -- snapshot / restore ------------------------------------------------
+
+    def snapshot(self, include_kv: bool = True) -> dict:
+        return {
+            "format": "replicated-engine-snapshot-v1",
+            "routing": self.routing,
+            "rr_cursor": self._rr,
+            "owner": dict(self._owner),
+            "replicas": [rep.snapshot(include_kv=include_kv)
+                         for rep in self.replicas],
+        }
+
+    @classmethod
+    def restore(cls, snap: dict, cfg, params, **engine_kw
+                ) -> "ReplicatedEngine":
+        if snap.get("format") != "replicated-engine-snapshot-v1":
+            raise ValueError(f"unknown snapshot format {snap.get('format')!r}")
+        reps = [ContinuousBatchingEngine.restore(s, cfg, params, **engine_kw)
+                for s in snap["replicas"]]
+        eng = cls(cfg, params, routing=snap["routing"], replicas=reps)
+        eng._rr = snap["rr_cursor"]
+        eng._owner = {int(k): int(v) for k, v in snap["owner"].items()}
+        return eng
+
+
+__all__ = ["ReplicatedEngine", "ROUTING_POLICIES"]

@@ -135,6 +135,15 @@ class HBMCostModel:
     kv_shard: int = 1             # KV-head shards (pool pages)
     allreduce_bytes_per_token: float = 0.0
     reduce_bandwidth_gbps: float = 300.0   # inter-shard reduction bus
+    # kernel-vs-dense attention pricing: the fused paged span kernel DMAs
+    # each page into VMEM exactly once, while the dense-gather fallback
+    # first materializes a contiguous (B, T, KV, hd) copy in HBM —
+    # ``kv_gather_overhead`` is that extra KV traffic as a fraction of the
+    # stream (1.0 = the copy is written and re-read once).  Default 0.0
+    # keeps the historical pricing for every existing caller; the tp bench
+    # sweep sets it to price the shard-mapped kernel's win honestly.
+    paged_kernel: bool = False
+    kv_gather_overhead: float = 0.0
 
     def _allreduce_ns(self, n_tokens: float) -> float:
         if self.allreduce_bytes_per_token <= 0.0:
@@ -142,9 +151,13 @@ class HBMCostModel:
         return (n_tokens * self.allreduce_bytes_per_token
                 / self.reduce_bandwidth_gbps)
 
+    def _kv_factor(self) -> float:
+        return 1.0 if self.paged_kernel else 1.0 + self.kv_gather_overhead
+
     def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
         weight_bytes = self.n_params * self.bytes_per_param / self.tp
-        kv_bytes = n_seqs * avg_ctx * self.kv_bytes_per_token / self.kv_shard
+        kv_bytes = (n_seqs * avg_ctx * self.kv_bytes_per_token
+                    / self.kv_shard * self._kv_factor())
         return ((weight_bytes + kv_bytes) / self.bandwidth_gbps
                 + self._allreduce_ns(n_seqs))
 
@@ -177,6 +190,7 @@ class HBMCostModel:
         kv = avg_ctx * self.kv_bytes_per_token / self.kv_shard
         return {"weight_bytes": weight, "kv_bytes": kv,
                 "weight_kv_bytes": weight + kv,
+                "kv_gather_bytes": kv * (self._kv_factor() - 1.0),
                 "allreduce_bytes": self.allreduce_bytes_per_token}
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
@@ -247,7 +261,9 @@ class CIMCostModel:
                  attn_dpu_ns_per_key: float = 0.05,
                  weight_bits: int = 8, fused_proj: bool = False,
                  kv_bits: int = 32, tp: int = 1,
-                 reduce_bus_gbps: float = 128.0):
+                 reduce_bus_gbps: float = 128.0,
+                 paged_kernel: bool = False,
+                 kv_gather_overhead: float = 0.0):
         import dataclasses as _dc
 
         from repro.cim.simulator import simulate
@@ -288,6 +304,12 @@ class CIMCostModel:
                              + self.allreduce_bytes_per_token
                              / self.reduce_bus_gbps)
         self.attn_dpu_ns_per_key /= self.kv_shard
+        # kernel-vs-dense pricing, mirroring HBMCostModel: the dense-gather
+        # fallback streams the gathered KV copy through the DPU once more
+        self.paged_kernel = paged_kernel
+        self.kv_gather_overhead = kv_gather_overhead
+        if not paged_kernel:
+            self.attn_dpu_ns_per_key *= 1.0 + kv_gather_overhead
 
     def decode_step_ns(self, n_seqs: int, avg_ctx: float) -> float:
         attn = self.attn_dpu_ns_per_key * avg_ctx
@@ -312,8 +334,11 @@ class CIMCostModel:
         kv = (avg_ctx * decode_kv_bytes_per_token(self.model_cfg,
                                                   self.kv_bits)
               / self.kv_shard)
+        gather = (0.0 if self.paged_kernel
+                  else kv * self.kv_gather_overhead)
         return {"weight_bytes": weight, "kv_bytes": kv,
                 "weight_kv_bytes": weight + kv,
+                "kv_gather_bytes": gather,
                 "allreduce_bytes": self.allreduce_bytes_per_token}
 
     def decode_step_nj(self, n_seqs: int, avg_ctx: float) -> float:
@@ -325,6 +350,15 @@ class CIMCostModel:
         return max(n_tokens - cached_tokens, 0) * self.per_token_nj
 
 
+def _common_prefix(a, b) -> int:
+    """Length of the shared leading run of two token sequences."""
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
 @dataclasses.dataclass
 class SchedulerConfig:
     max_slots: int = 8            # slot-batch width of the jitted mixed step
@@ -334,6 +368,11 @@ class SchedulerConfig:
     # admissions match the pool's prefix trie: cached tokens are skipped and
     # budgets count only the unique new pages a request actually consumes
     prefix_sharing: bool = True
+    # trie-aware admission grouping: park a WAITING request whose >=1-page
+    # prefix is being computed by a resident prefill or an earlier admission
+    # in the same plan, so only the leader computes it and the follower
+    # admits as a cache hit.  Needs prefix_sharing; off = strict FIFO.
+    prefix_grouping: bool = True
     # graceful degradation: when the allocatable-page fraction drops below
     # this threshold, prefill chunks are capped at one page's worth of
     # tokens — slower prefill instead of a preemption storm.  0.0 disables
@@ -354,6 +393,11 @@ class StepPlan:
     ``max_queue_wait_s`` budget that still could not be admitted — the
     engine aborts them (FINISHED/SHED) instead of queueing them forever.
     ``degraded`` counts prefill chunks capped by pool-pressure degradation.
+    ``prefix_deferred`` counts WAITING requests parked THIS plan because an
+    earlier admission (or a resident prefill) is about to commit a shared
+    prefix they will then admit against as a trie hit — deferral, not
+    starvation: the leader is in the same plan, so the follower's hit
+    arrives within a bounded number of steps.
     """
 
     spans: list[tuple[Sequence, int]] = dataclasses.field(default_factory=list)
@@ -362,6 +406,7 @@ class StepPlan:
     preemptions: list[Sequence] = dataclasses.field(default_factory=list)
     sheds: list[Request] = dataclasses.field(default_factory=list)
     degraded: int = 0
+    prefix_deferred: int = 0
 
     @property
     def n_decodes(self) -> int:
@@ -529,6 +574,20 @@ class IterationScheduler:
         ps = pool.page_size
         if match_memo is None:
             match_memo = {}
+        # trie-aware admission grouping: prefixes being computed RIGHT NOW —
+        # by a resident prefill or by an admission earlier in this plan —
+        # are not in the trie yet, so two requests sharing a prompt would
+        # both compute it.  A follower sharing at least one full
+        # page-aligned prefix with a leader beyond what the trie already
+        # serves is parked (``plan.prefix_deferred``) and re-considered next
+        # plan, by which point the leader has committed those pages and the
+        # follower admits as a cache hit (refcount bumps + one COW fork).
+        # Deferral never starves: the leader is in this same plan, and the
+        # moment no leader covers the follower it admits normally.
+        grouping = cfg.prefix_sharing and cfg.prefix_grouping
+        leaders: list = [seq.request.known_tokens for seq in cand
+                         if seq.request.state is RequestState.PREFILLING
+                         ] if grouping else []
         admit_order = sorted(waiting,
                              key=lambda r: -r.sampling.priority)
         for req in admit_order:
@@ -545,6 +604,14 @@ class IterationScheduler:
                 hit = match_memo[req.req_id] = pool.match_prefix(
                     req.known_tokens)
             cached = hit.n_tokens
+            if leaders:
+                toks = req.known_tokens
+                shared = max(_common_prefix(toks, L) for L in leaders)
+                # cap at len-1 (the trie never serves the final token) and
+                # page-align: only FULL pages become trie nodes mid-prefill
+                if (min(shared, len(toks) - 1) // ps) * ps > cached:
+                    plan.prefix_deferred += 1
+                    continue
             n_table = math.ceil(cached / ps)    # match pages, fork included
             slack = n_table * ps - cached       # room left in the fork page
             # the fork draws a page, and every matched page no sequence
@@ -566,6 +633,8 @@ class IterationScheduler:
             budget -= chunk
             free_slots -= 1
             plan.admissions.append((req, chunk))
+            if grouping:
+                leaders.append(req.known_tokens)
 
         if plan.total_tokens == 0 and cand:
             return None  # residents exist but none can move: preempt

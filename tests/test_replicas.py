@@ -1,0 +1,279 @@
+"""Tests for the data-parallel replicated engine (``serving/replicas.py``):
+router interleavings property-tested (no replica starves a request, affinity
+hits never exceed actual trie matches, cancel/deadline sweep through the
+router), greedy output agreement across replica counts, round-robin
+counters, snapshot/restore of the whole replica set, and metrics fan-in.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # optional dep: skips when absent
+
+import jax
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import ReplicatedEngine, SamplingParams
+from repro.serving.request import FinishReason
+
+CFG = ModelConfig(name="rep", d_model=64, n_layers=2, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=256, dtype="float32")
+
+KW = dict(max_slots=4, page_size=4, n_pages=64, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(n, lo=6, hi=12, seed=0, families=0):
+    """``n`` random prompts; with ``families`` > 0, draws each from one of
+    that many shared 8-token stems so prefix affinity has something to
+    route on."""
+    rng = np.random.RandomState(seed)
+    stems = [list(map(int, rng.randint(1, CFG.vocab - 1, 8)))
+             for _ in range(max(families, 1))]
+    out = []
+    for i in range(n):
+        tail = list(map(int, rng.randint(1, CFG.vocab - 1,
+                                         rng.randint(lo, hi))))
+        out.append((stems[i % families] + tail) if families else tail)
+    return out
+
+
+def _collect(eng, ids, max_steps=3000):
+    outs = {}
+    steps = 0
+    while len(outs) < len(ids):
+        for r in eng.step():
+            outs[r.req_id] = (list(r.output_tokens), r.finish_reason)
+        steps += 1
+        assert steps < max_steps, "replicated engine did not converge"
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# greedy agreement across replica counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_replicas", [2, 4])
+def test_replicas_greedy_agreement(params, n_replicas):
+    """Routing must not change WHAT is generated: greedy outputs at
+    R∈{2,4} are identical to a single engine (R=1), only the placement
+    differs."""
+    prompts = _prompts(8, seed=1, families=3)
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+
+    def run(r):
+        eng = ReplicatedEngine(CFG, params, n_replicas=r, **KW)
+        ids = [eng.add_request(p, sampling=sp).req_id for p in prompts]
+        outs = _collect(eng, ids)
+        return [outs[i][0] for i in ids], eng
+
+    base, _ = run(1)
+    got, eng = run(n_replicas)
+    assert got == base
+    # every replica with routed work produced it through its own engine
+    per = eng.stats()["replicas"]
+    assert sum(d["finished"] for d in per) == len(prompts)
+
+
+def test_replicas_affinity_routes_families_together(params):
+    """Staggered arrivals of prompt families: once a family's prefix is
+    committed on some replica, later members route to it (affinity hits),
+    and the pooled prefix-hit tokens beat round-robin placement."""
+    sp = SamplingParams(max_new_tokens=4, temperature=0.0)
+    prompts = _prompts(12, seed=2, families=3)
+
+    def run(routing):
+        eng = ReplicatedEngine(CFG, params, n_replicas=2, routing=routing,
+                               **KW)
+        done = set()
+        for p in prompts:
+            eng.add_request(p, sampling=sp)
+            for _ in range(2):  # let the leader commit before next arrival
+                done.update(r.req_id for r in eng.step())
+        done.update(r.req_id for r in eng.serve_all())
+        assert len(done) == len(prompts)
+        hit = sum(rep.pool_host.stats().prefix_hit_tokens
+                  for rep in eng.replicas)
+        return eng, hit
+
+    aff, aff_hits = run("affinity")
+    rr, rr_hits = run("round_robin")
+    router = aff.stats()["router"]
+    assert router["router.affinity_hits"] > 0
+    assert router["router.affinity_hit_tokens"] > 0
+    assert aff_hits > rr_hits, \
+        "affinity routing should concentrate prefix families"
+    assert rr.stats()["router"]["router.round_robin"] == len(prompts)
+
+
+def test_replicas_round_robin_counters(params):
+    sp = SamplingParams(max_new_tokens=2, temperature=0.0)
+    eng = ReplicatedEngine(CFG, params, n_replicas=3, routing="round_robin",
+                           **KW)
+    ids = [eng.add_request(p, sampling=sp).req_id
+           for p in _prompts(6, seed=3)]
+    assert [eng.owner_of(i) for i in ids] == [0, 1, 2, 0, 1, 2]
+    _collect(eng, ids)
+    r = eng.stats()["router"]
+    assert r["router.routed"] == 6
+    assert r["router.round_robin"] == 6
+    assert r["router.affinity_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# router interleavings (property): no starvation, honest hit accounting,
+# cancel/deadline through the router
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.data())
+def test_router_interleavings_no_starvation(params, data):
+    """Random interleavings of add/step/cancel across a 2-replica router:
+    every request reaches a terminal state (nothing starves on either
+    queue), affinity hits stay <= the number of adds whose pre-add trie
+    match was real, and cancels land on the owning replica."""
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    sp = SamplingParams(max_new_tokens=3, temperature=0.0)
+    prompts = _prompts(6, seed=7, families=2)
+    live, done, cancelled = [], {}, set()
+    real_matches = 0
+    for p in prompts:
+        # hit accounting oracle: recompute the pure routing decision the
+        # router is about to take
+        _, matched = eng.route(p)
+        real_matches += 1 if matched > 0 else 0
+        live.append(eng.add_request(p, sampling=sp).req_id)
+        for _ in range(data.draw(st.integers(0, 3), label="steps")):
+            for r in eng.step():
+                done[r.req_id] = r.finish_reason
+        if live and data.draw(st.booleans(), label="cancel"):
+            victim = live[data.draw(st.integers(0, len(live) - 1),
+                                    label="victim")]
+            if victim not in done and eng.cancel(victim):
+                cancelled.add(victim)
+    for r in eng.serve_all():
+        done[r.req_id] = r.finish_reason
+    assert set(live) <= (set(done) | cancelled), "a request starved"
+    assert not eng.has_work()
+    router = eng.stats()["router"]
+    assert router["router.affinity_hits"] <= real_matches
+    assert router["router.routed"] == len(prompts)
+    for rid in cancelled:
+        assert done.get(rid) in (None, FinishReason.ABORTED)
+
+
+def test_router_interleavings_seeded(params):
+    """Non-hypothesis twin of the property above so the interleaving
+    coverage survives environments without hypothesis installed."""
+    rng = np.random.RandomState(11)
+    for trial in range(4):
+        eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+        sp = SamplingParams(max_new_tokens=3, temperature=0.0)
+        prompts = _prompts(6, seed=20 + trial, families=2)
+        live, done, cancelled = [], {}, set()
+        real_matches = 0
+        for p in prompts:
+            _, matched = eng.route(p)
+            real_matches += 1 if matched > 0 else 0
+            live.append(eng.add_request(p, sampling=sp).req_id)
+            for _ in range(rng.randint(0, 4)):
+                for r in eng.step():
+                    done[r.req_id] = r.finish_reason
+            if live and rng.rand() < 0.4:
+                victim = live[rng.randint(len(live))]
+                if victim not in done and eng.cancel(victim):
+                    cancelled.add(victim)
+        for r in eng.serve_all():
+            done[r.req_id] = r.finish_reason
+        assert set(live) <= (set(done) | cancelled)
+        assert not eng.has_work()
+        assert eng.stats()["router"]["router.affinity_hits"] <= real_matches
+
+
+def test_router_deadline_sweeps_on_owner(params):
+    """A request with an expired deadline is driven to TIMEOUT by its
+    owning replica's sweep — the router only forwards lifecycle, it never
+    owns it."""
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    sp_dead = SamplingParams(max_new_tokens=4, temperature=0.0,
+                             deadline_s=0.0)
+    sp = SamplingParams(max_new_tokens=4, temperature=0.0)
+    doomed = eng.add_request(_prompts(1, seed=30)[0], sampling=sp_dead)
+    alive = eng.add_request(_prompts(1, seed=31)[0], sampling=sp)
+    outs = _collect(eng, [doomed.req_id, alive.req_id])
+    assert outs[doomed.req_id][1] == FinishReason.TIMEOUT
+    assert outs[alive.req_id][1] == FinishReason.LENGTH
+    assert eng.stats()["aggregate"]["timeouts"] == 1
+
+
+def test_router_cancel_unknown_and_finished(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    sp = SamplingParams(max_new_tokens=2, temperature=0.0)
+    req = eng.add_request(_prompts(1, seed=40)[0], sampling=sp)
+    assert eng.owner_of(req.req_id) is not None
+    _collect(eng, [req.req_id])
+    assert eng.owner_of(req.req_id) is None       # forgotten once finished
+    assert not eng.cancel(req.req_id)             # second cancel is a no-op
+    assert not eng.cancel(10_000_000)             # never-seen id
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore / metrics fan-in
+# ---------------------------------------------------------------------------
+
+
+def test_replicas_snapshot_restore_midflight(params):
+    sp = SamplingParams(max_new_tokens=6, temperature=0.0)
+    prompts = _prompts(4, seed=50, families=2)
+
+    base = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    ids = [base.add_request(p, sampling=sp).req_id for p in prompts]
+    want = _collect(base, ids)
+
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    ids2 = [eng.add_request(p, sampling=sp).req_id for p in prompts]
+    done = {}
+    for _ in range(3):
+        for r in eng.step():
+            done[r.req_id] = (list(r.output_tokens), r.finish_reason)
+    snap = eng.snapshot()
+    assert snap["format"] == "replicated-engine-snapshot-v1"
+    back = ReplicatedEngine.restore(snap, CFG, params)
+    assert back.n_replicas == 2
+    assert {k: v for k, v in back._owner.items()} == eng._owner
+    done.update(_collect(back, [i for i in ids2 if i not in done]))
+    got = {i2: done[i2][0] for i2 in ids2}
+    assert list(got.values()) == [want[i][0] for i in ids]
+
+
+def test_replicas_metrics_fan_in(params):
+    sp = SamplingParams(max_new_tokens=3, temperature=0.0)
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    ids = [eng.add_request(p, sampling=sp).req_id
+           for p in _prompts(4, seed=60, families=2)]
+    _collect(eng, ids)
+    reg = eng.sync_metrics()
+    names = {m.name for m in reg}
+    assert "router.routed" in names
+    for i in range(2):
+        assert f"replica{i}.engine.finished" in names or \
+            f"replica{i}.finished" in names, sorted(
+                n for n in names if n.startswith(f"replica{i}."))[:5]
+    agg = eng.stats()["aggregate"]
+    assert agg["finished"] == 4
+    per = eng.stats()["replicas"]
+    assert sum(d["finished"] for d in per) == 4
+
+
+def test_replicas_validation():
+    with pytest.raises(ValueError):
+        ReplicatedEngine(CFG, None, routing="random")
+    with pytest.raises(ValueError):
+        ReplicatedEngine(CFG, None, n_replicas=0)

@@ -304,8 +304,12 @@ def test_pool_invariants_random_ops_with_sharing(ops):
 # ---------------------------------------------------------------------------
 
 
-def _req(plen=8, max_new=8):
-    return Request(prompt=list(range(plen)),
+def _req(plen=8, max_new=8, base=0):
+    """``base`` offsets the token ids: distinct bases give prompts with no
+    shared prefix, so packing tests stay out of the trie-aware admission
+    grouping's way (which parks same-prefix followers — tested on its own
+    in ``test_plan_defers_shared_prefix_followers``)."""
+    return Request(prompt=list(range(base, base + plen)),
                    sampling=SamplingParams(max_new_tokens=max_new))
 
 
@@ -329,7 +333,7 @@ def test_plan_packs_chunks_around_decodes():
     d2 = _seq(pool, computed=8, state=RequestState.RUNNING, slot=1, order=1)
     p1 = _seq(pool, plen=32, computed=4, state=RequestState.PREFILLING,
               slot=2, order=2)
-    plan = sched.plan_step([_req(plen=16)], [d1, d2, p1], pool)
+    plan = sched.plan_step([_req(plen=16, base=100)], [d1, d2, p1], pool)
     # 2 mandatory decode tokens + a 4-token chunk for p1 + a 4-token first
     # chunk for the admission fill the 10-token step budget exactly
     assert [(s.req_id, n) for s, n in plan.spans] == \
@@ -354,11 +358,36 @@ def test_plan_chunks_cap_per_step_prefill():
     pool = PagedKVPool(n_pages=64, page_size=8)
     sched = IterationScheduler(SchedulerConfig(
         max_slots=8, chunk_size=8, max_step_tokens=12))
-    waiting = [_req(plen=32) for _ in range(4)]
+    waiting = [_req(plen=32, base=100 * i) for i in range(4)]
     plan = sched.plan_step(waiting, [], pool)
     # 8-token chunk for the head + 4 tokens of the next prompt = 12 budget;
     # nobody prefills a whole 32-token prompt in one step
     assert [n for _, n in plan.admissions] == [8, 4]
+
+
+def test_plan_defers_shared_prefix_followers():
+    """Trie-aware admission grouping: of N same-prompt arrivals only the
+    leader admits and computes; followers are parked (``prefix_deferred``)
+    until the leader's committed pages serve them as cache hits."""
+    pool = PagedKVPool(n_pages=64, page_size=8)
+    sched = IterationScheduler(SchedulerConfig(max_slots=8, chunk_size=32))
+    same = [_req(plen=32) for _ in range(3)]       # identical prompts
+    other = _req(plen=32, base=500)                # unrelated prompt
+    plan = sched.plan_step(same + [other], [], pool)
+    # leader + the unrelated request admit; the two followers are deferred
+    # (reordering: `other` admits AHEAD of the queued followers)
+    assert [r for r, _ in plan.admissions] == [same[0], other]
+    assert plan.prefix_deferred == 2
+    # a resident PREFILLING sequence is a leader too
+    lead = _seq(pool, plen=32, computed=8, state=RequestState.PREFILLING,
+                slot=0, order=0)
+    plan = sched.plan_step([_req(plen=32)], [lead], pool)
+    assert plan.prefix_deferred == 1 and not plan.admissions
+    # grouping off: strict FIFO admits everyone immediately
+    sched_off = IterationScheduler(SchedulerConfig(
+        max_slots=8, chunk_size=32, prefix_grouping=False))
+    plan = sched_off.plan_step(same + [other], [], pool)
+    assert len(plan.admissions) == 4 and plan.prefix_deferred == 0
 
 
 def test_plan_preempts_lowest_priority_for_decode_page():

@@ -7,6 +7,7 @@ trick).  On a plain single-device runner everything here skips.
 """
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -212,3 +213,176 @@ def test_tp_gqa_kv_replicates_but_weights_shard(params):
     assert out == base
     assert eng.tp == tp and eng.kv.kv_shard == 1
     eng.kv.check_shards()
+
+
+# ---------------------------------------------------------------------------
+# shard-mapped span kernel (PR 9): bitwise parity + engine identity
+# ---------------------------------------------------------------------------
+
+
+def _pool_fixture(seed=0, quantized=False):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    B, S, H, hd, P, pg, KV, MP = 3, 4, 8, 16, 12, 8, 8, 5
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    pt = jnp.asarray(rng.integers(1, P, size=(B, MP)), jnp.int32)
+    start = jnp.asarray([5, 11, 0], jnp.int32)
+    span = jnp.asarray([4, 2, 1], jnp.int32)
+    if quantized:
+        kp = jnp.asarray(rng.integers(-127, 128, size=(P, pg, KV, hd)),
+                         jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, size=(P, pg, KV, hd)),
+                         jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.01, 0.1, size=(P, KV)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.01, 0.1, size=(P, KV)), jnp.float32)
+        return q, kp, vp, pt, start, span, ks, vs
+    kp = jnp.asarray(rng.normal(size=(P, pg, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, pg, KV, hd)), jnp.float32)
+    return q, kp, vp, pt, start, span, None, None
+
+
+@pytest.mark.parametrize("tp", [2, 4, 8])
+@pytest.mark.parametrize("kv", ["fp32", "int8"])
+def test_sharded_span_kernel_bitwise_parity(tp, kv):
+    """The shard-mapped kernel at tp∈{2,4,8} is BITWISE the tp=1 kernel —
+    each shard runs the identical grid on its local KV-head slice, so
+    concatenating shard outputs reproduces the unsharded accumulation
+    exactly — and both match the dense-gather oracle numerically.
+
+    The one exception is the int8 path on the CPU interpret backend: XLA
+    fuses the in-VMEM dequant multiply into the einsum loops with
+    shape-dependent order, so at some local-KV widths the sharded result
+    lands within 1 ulp of the tp=1 kernel instead of on it.  Per-head math
+    is unchanged (fp32 stays bitwise at every tp), so int8 asserts ulp
+    closeness; greedy token identity through the engine covers the rest."""
+    if tp > N_DEV or N_DEV % tp:
+        pytest.skip(f"needs {tp} devices")
+    from repro.kernels.paged import (paged_attention_span,
+                                     paged_attention_span_sharded)
+    from repro.kernels.ref import paged_attention_span_ref
+    from repro.core.quant import dequantize_kv_pages
+    from repro.launch.mesh import make_host_mesh
+
+    q, kp, vp, pt, start, span, ks, vs = _pool_fixture(
+        seed=11, quantized=kv == "int8")
+    win = jnp.asarray(1_000_000_000, jnp.int32)
+    base = paged_attention_span(q, kp, vp, pt, start, span, win,
+                                k_scales=ks, v_scales=vs)
+    mesh = make_host_mesh(model=tp)
+    out = paged_attention_span_sharded(q, kp, vp, pt, start, span, win,
+                                       mesh, k_scales=ks, v_scales=vs)
+    if kv == "fp32":
+        assert (np.asarray(out) == np.asarray(base)).all(), \
+            "shard-mapped kernel drifted from the tp=1 kernel"
+    else:
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=0, atol=1e-6)
+    if kv == "int8":
+        kd = dequantize_kv_pages(kp, ks)
+        vd = dequantize_kv_pages(vp, vs)
+    else:
+        kd, vd = kp, vp
+    ref = paged_attention_span_ref(q, kd, vd, pt, start, span, 1_000_000_000)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("tp", [2, 4, 8])
+def test_tp_kernel_greedy_identity(params, tp):
+    """Engine with the shard-mapped kernel at tp>1: token-identical to the
+    tp=1 dense path, and every mixed step dispatched the kernel."""
+    if tp > N_DEV or N_DEV % tp:
+        pytest.skip(f"needs {tp} devices")
+    prompts = _prompts(4)
+    kw = dict(max_slots=4, page_size=8, n_pages=64, max_len=64)
+    base, _ = _serve(params, prompts, mesh=None, **kw)
+    out, eng = _serve(params, prompts, mesh=_mesh(tp),
+                      use_paged_kernel=True, **kw)
+    assert out == base
+    assert eng.stats["kernel_dispatches"] == eng.stats["mixed_steps"]
+    assert eng.stats["dense_fallbacks"] == 0
+    eng.kv.check_shards()
+
+
+def test_tp_kernel_identity_through_preemption(params):
+    tp = _tps()[-1]
+    kw = dict(max_slots=3, page_size=4, n_pages=14, max_len=48,
+              chunk_size=8)
+    prompts = _prompts(6, lo=10, hi=16, seed=3)
+    base, e1 = _serve(params, prompts, mesh=None, max_new=10, **kw)
+    out, e2 = _serve(params, prompts, mesh=_mesh(tp), max_new=10,
+                     use_paged_kernel=True, **kw)
+    assert out == base
+    assert e2.stats["preemptions"] > 0, "setup no longer forces preemption"
+    assert e2.stats["kernel_dispatches"] > 0
+
+
+def test_tp_kernel_identity_with_prefix_cow_and_int8(params):
+    """Shared prefix + COW forks + int8 KV pages, all through the
+    shard-mapped kernel: token-identical to the same workload on the
+    tp>1 dense path (int8 quantization makes tp=1 its own baseline)."""
+    tp = _tps()[-1]
+    shared = list(range(1, 17))
+    followers = [shared + [100 + i] for i in range(3)] + [shared]
+    kw = dict(max_slots=4, page_size=8, n_pages=64, max_len=64,
+              kv_dtype="int8")
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+
+    def serve(mesh, kern):
+        eng = ContinuousBatchingEngine(CFG, params, mesh=mesh,
+                                       use_paged_kernel=kern, **kw)
+        first = eng.add_request(shared + [99], sampling=sp).req_id
+        outs = {}
+        while first not in outs:
+            for r in eng.step():
+                outs[r.req_id] = list(r.output_tokens)
+        ids = [eng.add_request(p, sampling=sp).req_id for p in followers]
+        while len(outs) < len(ids) + 1:
+            for r in eng.step():
+                outs[r.req_id] = list(r.output_tokens)
+        return [outs[i] for i in [first] + ids], eng
+
+    base, e1 = serve(_mesh(tp), False)
+    out, e2 = serve(_mesh(tp), True)
+    assert out == base
+    assert e2.pool_host.stats().prefix_hit_tokens > 0
+    assert e2.stats["kernel_dispatches"] > 0
+    assert e2.stats["dense_fallbacks"] == 0
+    e2.kv.check_shards()
+
+
+def test_tp_kernel_dispatch_counters(params):
+    """The dispatch counters mirror the traced decision: MHA at tp>1 runs
+    the kernel every step; a GQA pool the axis can't split counts
+    ``gqa_replicated`` dense fallbacks; kernel off counts ``disabled``."""
+    tp = _tps()[0]
+    kw = dict(max_slots=2, page_size=8, n_pages=32, max_len=48)
+    _, eng = _serve(params, _prompts(2), mesh=_mesh(tp),
+                    use_paged_kernel=True, **kw)
+    assert eng.stats["kernel_dispatches"] == eng.stats["mixed_steps"] > 0
+
+    _, off = _serve(params, _prompts(2), mesh=_mesh(tp),
+                    use_paged_kernel=False, **kw)
+    assert off.stats["kernel_dispatches"] == 0
+    assert off.stats["dense_fallback_disabled"] == off.stats["mixed_steps"]
+
+    gqa = ModelConfig(name="tp_gqa_disp", d_model=128, n_layers=2,
+                      n_heads=8, n_kv_heads=2, d_ff=256, vocab=512,
+                      dtype="float32")
+    gtp = next((t for t in _tps() if gqa.n_kv_heads % t), None)
+    if gtp is None:
+        pytest.skip("no visible tp that fails to divide n_kv_heads")
+    gparams = T.init_params(jax.random.PRNGKey(1), gqa)
+    geng = ContinuousBatchingEngine(gqa, gparams, mesh=_mesh(gtp),
+                                    use_paged_kernel=True, **kw)
+    sp = SamplingParams(max_new_tokens=4, temperature=0.0)
+    done = 0
+    for p in _prompts(2, seed=9):
+        geng.add_request(p, sampling=sp)
+    while geng.has_work():
+        done += len(geng.step())
+    assert done == 2
+    assert geng.stats["kernel_dispatches"] == 0
+    assert geng.stats["dense_fallback_gqa_replicated"] == \
+        geng.stats["mixed_steps"] > 0
