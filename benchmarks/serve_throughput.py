@@ -58,6 +58,15 @@ asserts the recovery invariants (exact refcount/slot accounting, zero
 leaked pages) and 100% greedy token agreement of surviving requests
 against a fault-free reference run.
 
+Part 9 (replica_ft): replica-level fault tolerance.  A burst over a
+4-replica fleet has one replica killed mid-burst three ways — crash with
+no published snapshot (pure request migration), crash with snapshots
+published every 2 router steps (in-place restore under a fresh heartbeat
+rank), and a poison request that rides two replicas down (quarantine).
+Every cell asserts 100% of non-poisoned requests finish, greedy outputs
+token-identical to a fault-free reference run, and zero leaked pages on
+every survivor (``assert_fleet_invariants``).
+
 Cost models are constructed ONCE per (name, config) via ``_cost_model`` and
 reused across every sweep cell and warm-up pass — a ``CIMCostModel`` runs
 the paper's simulator at construction, so rebuilding it per cell was pure
@@ -102,12 +111,19 @@ Emits BENCH_serving.json:
                                           "prefix_hit_tokens": ...},
                              "round_robin": {...}},
                 "config": {...}},
+   "replica_ft": {"no_fault": {"finished": ..., "steps": ...},
+                  "cells": [{"cell": "migration", "failovers": 1,
+                             "restored": 0, "migrated": ..., "finished": ...,
+                             "agreement": 1.0, "quarantined": 0,
+                             "leaked_pages": 0}, ...],
+                  "config": {...}},
    "outputs_match": true}
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
       (--tp-only + XLA_FLAGS=--xla_force_host_platform_device_count=8 runs
       just the tensor-parallel sweep and merges the `tp` section into --out;
-      --replicas-only likewise merges just the `replicas` section)
+      --replicas-only / --replica-ft-only likewise merge just the
+      `replicas` / `replica_ft` sections)
 """
 
 from __future__ import annotations
@@ -847,6 +863,190 @@ def assert_replicas_acceptance(rep):
           f"{rr['prefix_hit_tokens']} -> {aff['prefix_hit_tokens']}")
 
 
+def run_replica_ft(*, n_replicas=4, n_requests=16, prompt_len=24,
+                   new_tokens=8, max_slots=4):
+    """Part 9: kill 1 of ``n_replicas`` replicas mid-burst, three ways.
+
+    ``migration``: the victim crashes with NO published snapshot, so its
+    resident requests migrate to survivors as WAITING and recompute from
+    their kept tokens (PR 3 recompute-on-resume).  ``snapshot_failover``:
+    snapshots are published every 2 router steps, so the victim restores
+    in place from its last snapshot under a fresh heartbeat rank.
+    ``quarantine``: request 0 is poisoned — its owner crashes, then the
+    replica it migrated to crashes too — so it finishes ABORTED after
+    exhausting its retry budget while every other request completes.
+
+    Outputs are keyed by ADDITION INDEX (req ids differ across runs) and
+    compared against a fault-free reference; ``assert_fleet_invariants``
+    is the page-leak oracle on every survivor at the end of each cell.
+    """
+    from repro.serving import FaultInjector, ReplicatedEngine
+    from repro.serving.faults import assert_fleet_invariants
+
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    cost = _cost_model("hbm", seq_len=prompt_len)
+    rng = np.random.RandomState(23)
+    prompts = [list(map(int, rng.randint(1, CFG.vocab - 1, prompt_len)))
+               for _ in range(n_requests)]
+    sp = SamplingParams(max_new_tokens=new_tokens, temperature=0.0)
+    # +16 headroom: the quarantine cell's poison generates 8 extra tokens
+    kw = dict(max_slots=max_slots, page_size=8, cost_model=cost,
+              max_len=prompt_len + new_tokens + 16, routing="round_robin")
+
+    def fleet():
+        return ReplicatedEngine(CFG, params, n_replicas=n_replicas, **kw)
+
+    def arm_crash(eng, idx):
+        inj = FaultInjector(seed=0)
+        inj.schedule(eng.replicas[idx].step_idx + 1, "crash_before_harvest")
+        eng.replicas[idx].faults = inj
+
+    def serve(eng, reqs, *, crash_step=None, publish_every=None):
+        """Step to empty; returns ({addition_index: (tokens, reason)}, steps)."""
+        idx = {r.req_id: i for i, r in enumerate(reqs)}
+        outs, steps = {}, 0
+        while eng.has_work():
+            if publish_every and steps % publish_every == 0:
+                eng.publish_snapshots()
+            if crash_step is not None and steps == crash_step:
+                victim = next(i for i in range(eng.n_replicas)
+                              if eng.health(i).live
+                              and eng.replicas[i].has_work())
+                arm_crash(eng, victim)
+            for r in eng.step():
+                outs[idx[r.req_id]] = (list(r.output_tokens),
+                                       r.finish_reason.value)
+            steps += 1
+            assert steps < 5000, "replica-ft fleet did not converge"
+        assert_fleet_invariants(eng)
+        return outs, steps
+
+    # warm the jit cache so the fault cells don't pay compile time
+    warm = fleet()
+    serve(warm, [warm.add_request(p, sampling=sp) for p in prompts])
+
+    eng = fleet()
+    base, base_steps = serve(
+        eng, [eng.add_request(p, sampling=sp) for p in prompts])
+    assert len(base) == n_requests
+
+    def agreement(outs, skip=()):
+        keys = [i for i in range(n_requests) if i not in skip]
+        return float(np.mean([outs.get(i) == base[i] for i in keys]))
+
+    def router_cell(eng, outs, cell, **extra):
+        r = eng.stats()["router"]
+        row = {"cell": cell,
+               "failovers": r["router.failovers"],
+               "restored": r["router.restored_replicas"],
+               "migrated": r["router.migrations"],
+               "quarantined": r["router.quarantined"],
+               "finished": len(outs),
+               "leaked_pages": 0}  # assert_fleet_invariants already passed
+        row.update(extra)
+        return row
+
+    cells = []
+
+    # cell 1: crash with no published snapshot -> pure request migration
+    eng = fleet()
+    outs, _ = serve(eng, [eng.add_request(p, sampling=sp) for p in prompts],
+                    crash_step=2)
+    cells.append(router_cell(eng, outs, "migration",
+                             agreement=agreement(outs)))
+    print(f"  migration: {cells[-1]['migrated']} requests migrated, "
+          f"{cells[-1]['finished']}/{n_requests} finished, "
+          f"agreement {cells[-1]['agreement']:.2f}")
+
+    # cell 2: snapshots published every 2 steps -> in-place restore
+    eng = fleet()
+    outs, _ = serve(eng, [eng.add_request(p, sampling=sp) for p in prompts],
+                    crash_step=3, publish_every=2)
+    cells.append(router_cell(eng, outs, "snapshot_failover",
+                             agreement=agreement(outs)))
+    print(f"  snapshot_failover: {cells[-1]['restored']} replica(s) "
+          f"restored, {cells[-1]['finished']}/{n_requests} finished, "
+          f"agreement {cells[-1]['agreement']:.2f}")
+
+    # cell 3: a poison request rides two replicas down -> quarantine.  The
+    # poison generates longer than everyone else and the second crash waits
+    # for every innocent request to finish, so the retry budget is charged
+    # twice to the poison ONLY (an innocent that migrated off the first
+    # crash and then rode the second one down would be quarantined too —
+    # legitimately, but it would muddy the survivor-agreement check).
+    eng = fleet()
+    reqs = [eng.add_request(p, sampling=SamplingParams(
+                max_new_tokens=new_tokens + (8 if i == 0 else 0),
+                temperature=0.0))
+            for i, p in enumerate(prompts)]
+    idx = {r.req_id: i for i, r in enumerate(reqs)}
+    outs = {}
+
+    def step_once():
+        for r in eng.step():
+            outs[idx[r.req_id]] = (list(r.output_tokens),
+                                   r.finish_reason.value)
+
+    poison = reqs[0].req_id
+    first = eng.owner_of(poison)
+    arm_crash(eng, first)
+    step_once()
+    steps = 0
+    while len(outs) < n_requests - 1:  # let every innocent finish first
+        step_once()
+        steps += 1
+        assert steps < 5000, "quarantine cell did not converge"
+    second = eng.owner_of(poison)
+    assert second is not None and second != first, \
+        "poison request did not migrate after the first crash"
+    arm_crash(eng, second)
+    while eng.has_work():
+        step_once()
+        steps += 1
+        assert steps < 5000, "quarantine cell did not converge"
+    assert_fleet_invariants(eng)
+    cells.append(router_cell(eng, outs, "quarantine",
+                             survivor_agreement=agreement(outs, skip=(0,)),
+                             poison_reason=outs[0][1]))
+    print(f"  quarantine: poison finished {cells[-1]['poison_reason']}, "
+          f"{cells[-1]['quarantined']} quarantined, survivor agreement "
+          f"{cells[-1]['survivor_agreement']:.2f}")
+
+    return {"no_fault": {"finished": len(base), "steps": base_steps},
+            "cells": cells,
+            "config": {"n_replicas": n_replicas, "n_requests": n_requests,
+                       "max_slots": max_slots, "prompt_len": prompt_len,
+                       "new_tokens": new_tokens}}
+
+
+def assert_replica_ft_acceptance(rep):
+    """Acceptance for the ``replica_ft`` section: every cell finishes 100%
+    of its requests (the quarantined poison finishes too — ABORTED); the
+    migration cell recovers WITHOUT snapshots and the snapshot cell WITH
+    them; greedy outputs of non-poisoned requests are token-identical to
+    the fault-free run; no cell leaks pages."""
+    n = rep["config"]["n_requests"]
+    assert rep["no_fault"]["finished"] == n, rep["no_fault"]
+    cells = {c["cell"]: c for c in rep["cells"]}
+    for c in cells.values():
+        assert c["finished"] == n, c
+        assert c["leaked_pages"] == 0, c
+        assert c["failovers"] >= 1, c
+    mig = cells["migration"]
+    assert mig["restored"] == 0 and mig["migrated"] > 0, mig
+    assert mig["agreement"] == 1.0, mig
+    assert mig["quarantined"] == 0, mig
+    snap = cells["snapshot_failover"]
+    assert snap["restored"] >= 1, snap
+    assert snap["agreement"] == 1.0, snap
+    quar = cells["quarantine"]
+    assert quar["quarantined"] >= 1, quar
+    assert quar["poison_reason"] == "aborted", quar
+    assert quar["survivor_agreement"] == 1.0, quar
+    print(f"replica_ft: all {len(cells)} fault cells finished {n}/{n} "
+          f"requests with 100% survivor agreement and zero leaked pages")
+
+
 def assert_tp_acceptance(rows):
     """Acceptance for the ``tp`` section (only binding when the sweep ran
     more than the tp=1 anchor, i.e. under the forced-device CI job):
@@ -1092,7 +1292,26 @@ def main():
     ap.add_argument("--replicas-only", action="store_true",
                     help="run ONLY the data-parallel replica sweep and "
                          "merge its `replicas` section into --out")
+    ap.add_argument("--replica-ft-only", action="store_true",
+                    help="run ONLY the replica fault-tolerance cells and "
+                         "merge their `replica_ft` section into --out")
     args = ap.parse_args()
+
+    if args.replica_ft_only:
+        print("replica_ft:")
+        rep = run_replica_ft(new_tokens=min(args.new_tokens, 8))
+        try:
+            with open(args.out) as f:
+                payload = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            payload = {"bench": "serving_throughput"}
+        payload["replica_ft"] = rep
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out} (replica_ft section, "
+              f"{len(rep['cells'])} cells)")
+        assert_replica_ft_acceptance(rep)
+        return
 
     if args.replicas_only:
         print("replicas sweep:")
@@ -1159,6 +1378,8 @@ def main():
                                new_tokens=new_tokens)
         print("replicas sweep (smoke):")
         replicas = run_replicas_sweep(new_tokens=new_tokens)
+        print("replica_ft (smoke):")
+        replica_ft = run_replica_ft(n_requests=8, new_tokens=new_tokens)
     else:
         results, m1 = run_throughput(params, (1, 2, 4, 8), prompt_len=16,
                                      new_tokens=args.new_tokens)
@@ -1188,12 +1409,14 @@ def main():
         tp_rows = run_tp_sweep(new_tokens=min(args.new_tokens, 8))
         print("replicas sweep:")
         replicas = run_replicas_sweep(new_tokens=min(args.new_tokens, 8))
+        print("replica_ft:")
+        replica_ft = run_replica_ft(new_tokens=min(args.new_tokens, 8))
     all_match = m1 and m2 and m3
     payload = {"bench": "serving_throughput", "smoke": args.smoke,
                "results": results, "chunked": chunked, "prefix": prefix,
                "kv_quant": kv_quant, "telemetry": telemetry,
                "robustness": robustness, "tp": tp_rows,
-               "replicas": replicas,
+               "replicas": replicas, "replica_ft": replica_ft,
                "outputs_match": all_match}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -1268,6 +1491,9 @@ def main():
     # acceptance (replicas): 100% greedy agreement across replica counts,
     # >=1.7x request throughput at R=2, affinity beats round_robin
     assert_replicas_acceptance(replicas)
+    # acceptance (replica_ft): every fault cell finishes 100% of requests
+    # with token-identical survivor outputs and zero leaked pages
+    assert_replica_ft_acceptance(replica_ft)
     at8 = [r for r in results if r["concurrency"] == 8]
     if at8:
         print(f"speedup at 8 concurrent: {at8[0]['speedup']:.2f}x")

@@ -3,6 +3,8 @@ mitigation, gradient compression."""
 
 from repro.ft.coordinator import (  # noqa: F401
     ElasticPlan,
+    EngineSupervisor,
+    FleetSupervisor,
     HeartbeatRegistry,
     StragglerMonitor,
     plan_elastic_remesh,

@@ -29,6 +29,29 @@ class HeartbeatRegistry:
         self.timeout_s = timeout_s
         self._last: dict[int, float] = {}
         self._step: dict[int, int] = {}
+        self._claimed: set[int] = set()
+
+    def claim(self, rank: Optional[int] = None) -> int:
+        """Reserve a rank in this registry.  ``rank=None`` hands out the
+        lowest free rank; an explicit rank that is already claimed raises —
+        two supervisors silently sharing one rank would shadow each other's
+        liveness stamps, turning a dead worker invisible."""
+        if rank is None:
+            rank = 0
+            while rank in self._claimed:
+                rank += 1
+        elif rank in self._claimed:
+            raise ValueError(
+                f"rank {rank} already claimed in this registry; pass "
+                f"rank=None to auto-assign a free one")
+        self._claimed.add(rank)
+        return rank
+
+    def release(self, rank: int) -> None:
+        """Drop a claimed rank's liveness state (detach)."""
+        self._claimed.discard(rank)
+        self._last.pop(rank, None)
+        self._step.pop(rank, None)
 
     def report(self, rank: int, step: int, now: Optional[float] = None):
         self._last[rank] = time.monotonic() if now is None else now
@@ -39,6 +62,10 @@ class HeartbeatRegistry:
         return sorted(
             r for r, t in self._last.items() if now - t > self.timeout_s
         )
+
+    def last_step(self, rank: int) -> int:
+        """The newest step this rank reported (0 if it never reported)."""
+        return self._step.get(rank, 0)
 
     def fleet_step(self) -> int:
         return min(self._step.values()) if self._step else 0
@@ -85,9 +112,13 @@ class EngineSupervisor:
     recovery contract in ``serving/snapshot.py``.
     """
 
-    def __init__(self, timeout_s: float = 60.0, rank: int = 0):
-        self.heartbeat = HeartbeatRegistry(timeout_s=timeout_s)
-        self.rank = rank
+    def __init__(self, timeout_s: float = 60.0, rank: Optional[int] = None,
+                 heartbeat: Optional[HeartbeatRegistry] = None):
+        self.heartbeat = heartbeat or HeartbeatRegistry(timeout_s=timeout_s)
+        # claim the rank in the (possibly shared) registry: supervisors
+        # sharing one registry get distinct ranks automatically, and an
+        # explicit collision raises instead of silently shadowing stamps
+        self.rank = self.heartbeat.claim(rank)
         self.last_snapshot: Optional[dict] = None
 
     def attach(self, engine) -> None:
@@ -116,6 +147,79 @@ class EngineSupervisor:
         engine = restore_engine(self.last_snapshot, cfg, params, **engine_kw)
         self.attach(engine)
         return engine
+
+
+class FleetSupervisor:
+    """Per-replica liveness, straggler detection and snapshot custody for a
+    replica fleet (``serving/replicas.py``).
+
+    Generalizes :class:`EngineSupervisor` across R engines: ONE shared
+    :class:`HeartbeatRegistry` hands each attached engine a distinct rank
+    (``attach`` auto-claims; explicit collisions raise), ONE
+    :class:`StragglerMonitor` compares per-replica step times against the
+    fleet median, and ``publish``/``snapshot_for`` keep one recovery point
+    per rank.  The router drives it: it reports step times, sweeps
+    ``failed_ranks``/``straggler_ranks`` into replica health transitions,
+    and calls ``recover`` (snapshot failover) or migrates requests itself
+    when no snapshot was ever published.
+    """
+
+    def __init__(self, timeout_s: float = 60.0, straggler_window: int = 8,
+                 straggler_threshold: float = 3.0):
+        self.heartbeat = HeartbeatRegistry(timeout_s=timeout_s)
+        self.stragglers = StragglerMonitor(window=straggler_window,
+                                           threshold=straggler_threshold)
+        self._snapshots: dict[int, dict] = {}
+
+    def attach(self, engine, rank: Optional[int] = None) -> int:
+        """Claim a (distinct) rank for the engine and wire its per-step
+        heartbeat into the shared registry; returns the rank."""
+        rank = self.heartbeat.claim(rank)
+        engine.heartbeat = self.heartbeat
+        engine.heartbeat_rank = rank
+        engine.heartbeat.report(rank, engine.step_idx)
+        return rank
+
+    def detach(self, rank: int) -> None:
+        """Forget a rank entirely: liveness stamps, straggler history, and
+        its published snapshot."""
+        self.heartbeat.release(rank)
+        self.stragglers._times.pop(rank, None)
+        self._snapshots.pop(rank, None)
+
+    def publish(self, rank: int, snapshot: dict) -> None:
+        """Record a rank's newest snapshot as its recovery point."""
+        self._snapshots[rank] = snapshot
+
+    def snapshot_for(self, rank: int) -> Optional[dict]:
+        return self._snapshots.get(rank)
+
+    def failed_ranks(self, now: Optional[float] = None) -> list[int]:
+        return self.heartbeat.failed_ranks(now)
+
+    def report_step_time(self, rank: int, step_time_s: float) -> None:
+        self.stragglers.report(rank, step_time_s)
+
+    def straggler_ranks(self) -> list[int]:
+        return self.stragglers.stragglers()
+
+    def recover(self, rank: int, cfg, params, **engine_kw):
+        """Rebuild a failed rank's engine from its last published snapshot
+        (raises if none exists) and re-attach it under a FRESH rank — the
+        dead rank's stamps are purged, never reused.  Returns
+        ``(engine, new_rank)``; the recovery point carries over."""
+        snap = self._snapshots.get(rank)
+        if snap is None:
+            raise RuntimeError(
+                f"no snapshot published for rank {rank}; nothing to "
+                f"recover from")
+        from repro.serving.snapshot import restore_engine
+
+        engine = restore_engine(snap, cfg, params, **engine_kw)
+        self.detach(rank)
+        new_rank = self.attach(engine)
+        self._snapshots[new_rank] = snap
+        return engine, new_rank
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +275,7 @@ def plan_elastic_remesh(
 __all__ = [
     "HeartbeatRegistry",
     "EngineSupervisor",
+    "FleetSupervisor",
     "StragglerMonitor",
     "ElasticPlan",
     "plan_elastic_remesh",

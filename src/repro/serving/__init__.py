@@ -152,6 +152,36 @@ process death.  The contract has four legs:
     refcounts exact, no leaked pages, slot accounting exact) used by the
     chaos tests and the ``serve_throughput.py`` robustness sweep.
 
+Fleet-level recovery contract (``replicas.py`` + ``ft.coordinator``):
+above the single engine, a ``ReplicatedEngine`` keeps a health state per
+replica (HEALTHY / DEGRADED / DRAINING / DOWN) driven by a
+``FleetSupervisor`` — per-replica heartbeat ranks in one shared registry,
+a fleet-median straggler monitor, one published snapshot per rank — plus
+step-exception capture: a replica whose ``step()`` raises (or goes
+heartbeat-silent) is marked DOWN and failed over instead of poisoning the
+router loop, and ``route()`` never selects a non-HEALTHY replica.
+
+  * WHAT FAILOVER PRESERVES: with a published snapshot, the slot restores
+    in place under a fresh rank, token-identical per the snapshot
+    contract for everything the snapshot holds; requests the router
+    already reported finished are reconciled away (never re-served).
+  * WHAT MIGRATION RECOMPUTES: without a snapshot, orphaned requests
+    (prompt, emitted tokens, budgets, priority) readmit on survivors as
+    WAITING — recompute-on-resume pays only the KV work again, and
+    sampled requests replay their PRNG carry host-side from the seed, so
+    greedy AND sampled outputs stay token-identical.
+  * WHAT QUARANTINE DROPS: a request whose replica dies
+    ``max_request_retries`` times under it is poison — it finishes
+    ABORTED (``router.quarantined``) instead of taking another replica
+    down.  Nothing else is ever dropped: 100% of non-poisoned requests
+    finish.
+  * ELASTICITY: ``drain_replica`` / ``scale_to`` resize the fleet
+    (migrate-and-detach, or fresh same-geometry engines), and fleet
+    snapshots (format v2) record health + retry state so restore
+    reproduces a degraded fleet exactly.  ``assert_fleet_invariants`` is
+    the fleet-level oracle: every survivor passes the single-engine
+    invariants and the owner table references only live requests.
+
 Module map:
   request.py   — ``Request``/``Sequence`` lifecycle, the
                  ``num_computed_tokens`` cursor (starts at the matched
@@ -184,8 +214,11 @@ Module map:
                  behind a shared admission point with prefix-trie
                  affinity routing (``match_prefix`` scored per replica,
                  least-loaded fallback, ``routing="round_robin"``
-                 baseline), fanned metrics, per-replica snapshots — see
-                 its module docstring for the router/affinity contract.
+                 baseline), per-replica health + failover/migration/
+                 quarantine, elastic ``drain_replica``/``scale_to``,
+                 fanned metrics, fleet snapshots — see its module
+                 docstring for the router/affinity and fault-tolerance
+                 contracts.
   engine.py    — ``ContinuousBatchingEngine``: ONE jitted mixed step over
                  (slot, span) with on-device sampling, lagged token
                  harvest, trie lookup at ``add_request``, prefix acquire +
@@ -235,14 +268,15 @@ from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
 from repro.serving.faults import (DispatchFailure,  # noqa: F401
                                   FaultInjector, InjectedFault,
                                   SimulatedCrash,
+                                  assert_fleet_invariants,
                                   assert_recovery_invariants)
 from repro.serving.kv_pool import (PagedKVPool, PoolOOM,  # noqa: F401
                                    PoolStats, PrefixMatch)
 from repro.serving.metrics import (Calibration, Counter,  # noqa: F401
                                    EngineStats, Gauge, Histogram,
                                    MetricsRegistry, render_report)
-from repro.serving.replicas import (ReplicatedEngine,  # noqa: F401
-                                    ROUTING_POLICIES)
+from repro.serving.replicas import (ReplicaHealth,  # noqa: F401
+                                    ReplicatedEngine, ROUTING_POLICIES)
 from repro.serving.request import (FinishReason, Request,  # noqa: F401
                                    RequestState, SamplingParams, Sequence)
 from repro.serving.scheduler import (CIMCostModel, CostModel,  # noqa: F401

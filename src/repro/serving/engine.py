@@ -417,6 +417,9 @@ class ContinuousBatchingEngine:
         # perf_counter so measured step durations never inherit the skew).
         self._clock = time.perf_counter
         self.faults = fault_injector
+        # reported step-time multiplier for the fleet StragglerMonitor
+        # (the "straggle" fault inflates it; 1.0 = honest wall time)
+        self.straggle_factor = 1.0
         # optional liveness reporting: ``heartbeat.report(rank, step)`` is
         # called once per step — ``ft.coordinator.EngineSupervisor`` watches
         # it and recovers a quiet engine from its last published snapshot
@@ -467,6 +470,40 @@ class ContinuousBatchingEngine:
                 req.known_tokens).n_tokens
         req.arrived_step = self.step_idx
         req.t_arrival = req.t_enqueued = req.mark("arrived", self._clock())
+        self.waiting.append(req)
+        if self.metrics_enabled:
+            self._g_queue.set(len(self.waiting))
+        return req
+
+    def readmit(self, req: Request) -> Request:
+        """Adopt an EXISTING request — typically migrated off a failed
+        replica — into this engine's waiting queue via the preemption
+        contract: cursor reset (its KV lives on the dead engine, recompute
+        on resume), emitted tokens / ``resume_key`` / budgets / priority
+        kept.  ``t_arrival`` is preserved, so a ``deadline_s`` budget keeps
+        counting from the original arrival; the queue-wait clock restarts
+        (the migration is scheduler latency the request should not be shed
+        for)."""
+        if req.state is RequestState.FINISHED:
+            raise ValueError(
+                f"request {req.req_id} already finished; nothing to readmit")
+        if req.max_total_len > self.max_len:
+            raise PoolOOM(
+                f"prompt+max_new={req.max_total_len} exceeds max_len="
+                f"{self.max_len}")
+        need = self.pool_host.pages_for(req.max_total_len)
+        if need > self.pool_host.n_pages - 1:
+            raise PoolOOM(
+                f"request needs {need} pages; pool has "
+                f"{self.pool_host.n_pages - 1} total")
+        req.state = RequestState.WAITING
+        req.num_computed_tokens = 0
+        req.num_cached_tokens = 0
+        req.arrived_step = self.step_idx
+        now = self._clock()
+        if req.t_arrival < 0:
+            req.t_arrival = now
+        req.t_enqueued = req.mark("migrated", now)
         self.waiting.append(req)
         if self.metrics_enabled:
             self._g_queue.set(len(self.waiting))

@@ -28,11 +28,26 @@ Fault kinds:
     seconds.  Deadline sweeps and queue-wait shedding fire early; wall
     time measured by the calibration does not (it reads raw
     ``perf_counter``).
+  * ``heartbeat_silence`` — drop the engine's heartbeat reporting (models
+    a worker that keeps burning CPU but stops talking to the control
+    plane).  The engine itself keeps stepping; detection is the FLEET's
+    job — ``ReplicatedEngine`` marks a replica DOWN once its reported
+    heartbeat step lags its own ``step_idx`` past the router's
+    ``silence_steps_down`` budget (deterministic, no wall clock) or once
+    the registry's wall-clock timeout expires.
+  * ``straggle`` — multiply the step times this engine's replica reports
+    to the fleet ``StragglerMonitor`` by ``factor`` (optionally for
+    ``hold_steps`` steps).  A flagged replica is DEGRADED: it keeps
+    serving its residents but ``route()`` sends it no new work until its
+    rolling window recovers.
 
 ``assert_recovery_invariants`` is the post-fault oracle the chaos tests
 and the ``serve_throughput.py`` robustness sweep share: pool refcounts
 equal table holders, no page is held by a sequence the engine no longer
 tracks (leak check), and the slot accounting is exact.
+``assert_fleet_invariants`` lifts it to a replica fleet: every non-DOWN
+replica passes the single-engine oracle, and the router's ``_owner``
+table references only live, unreported requests on live replicas.
 """
 
 from __future__ import annotations
@@ -45,7 +60,8 @@ import numpy as np
 from repro.serving.kv_pool import PoolOOM
 
 FAULT_KINDS = ("pool_exhaustion", "dispatch_failure", "crash_before_harvest",
-               "crash_after_harvest", "clock_skew")
+               "crash_after_harvest", "clock_skew", "heartbeat_silence",
+               "straggle")
 
 
 class InjectedFault(RuntimeError):
@@ -96,6 +112,7 @@ class FaultInjector:
         self.events: list[_Event] = []
         self.log: list[tuple[int, str, object]] = []
         self._held: list[tuple[int, int]] = []   # (release_step, fault_seq)
+        self._straggles: list[int] = []          # straggle release steps
         self._n_fault_seqs = 0
 
     def schedule(self, step: int, kind: str, **kw) -> "FaultInjector":
@@ -132,6 +149,11 @@ class FaultInjector:
                 engine.pool_host.free(sid)
                 self._held.remove((rel, sid))
                 self.log.append((step, "pool_release", sid))
+        for rel in list(self._straggles):
+            if step >= rel:
+                engine.straggle_factor = 1.0
+                self._straggles.remove(rel)
+                self.log.append((step, "straggle_release", None))
         for ev in self.events:
             if ev.fired or ev.step != step:
                 continue
@@ -144,6 +166,18 @@ class FaultInjector:
                 base = engine._clock
                 engine._clock = lambda b=base, s=skew: b() + s
                 self.log.append((step, "clock_skew", skew))
+            elif ev.kind == "heartbeat_silence":
+                ev.fired = True
+                engine.heartbeat = None
+                self.log.append((step, "heartbeat_silence", None))
+            elif ev.kind == "straggle":
+                ev.fired = True
+                factor = float(ev.kw.get("factor", 8.0))
+                engine.straggle_factor = factor
+                hold = ev.kw.get("hold_steps")
+                if hold is not None:
+                    self._straggles.append(step + int(hold))
+                self.log.append((step, "straggle", factor))
 
     def on_dispatch(self, engine) -> None:
         """Called at the top of the engine's dispatch, before any host
@@ -233,5 +267,33 @@ def assert_recovery_invariants(engine) -> None:
         list(range(engine.max_slots)), "slot accounting drifted"
 
 
+def assert_fleet_invariants(router) -> None:
+    """Post-fault oracle for a ``ReplicatedEngine``: every non-DOWN
+    replica passes ``assert_recovery_invariants`` (so zero leaked pages on
+    every survivor), and the router's ``_owner`` table points only at
+    live, unreported requests hosted on live replicas — never at a DOWN
+    replica, a finished-and-reported request, a migrated-away copy, or a
+    quarantined id."""
+    from repro.serving.replicas import ReplicaHealth
+
+    live_ids: dict[int, set[int]] = {}
+    for i, rep in enumerate(router.replicas):
+        if router.health(i) is ReplicaHealth.DOWN:
+            continue
+        assert_recovery_invariants(rep)
+        live_ids[i] = ({r.req_id for r in rep.waiting}
+                       | {s.req_id for s in rep.running.values()}
+                       | {r.req_id for r in rep._overflow})
+    pending = {r.req_id for r in router._router_overflow}
+    for rid, idx in router._owner.items():
+        assert idx in live_ids, \
+            f"owner table points request {rid} at DOWN replica {idx}"
+        assert rid in live_ids[idx] or rid in pending, \
+            f"owner table references request {rid} absent from replica {idx}"
+    leaked = set(router._owner) & router.quarantined
+    assert not leaked, f"quarantined requests still owned: {sorted(leaked)}"
+
+
 __all__ = ["FaultInjector", "InjectedFault", "DispatchFailure",
-           "SimulatedCrash", "FAULT_KINDS", "assert_recovery_invariants"]
+           "SimulatedCrash", "FAULT_KINDS", "assert_recovery_invariants",
+           "assert_fleet_invariants"]

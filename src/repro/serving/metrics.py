@@ -237,6 +237,32 @@ class MetricsRegistry:
         for m in self._metrics.values():
             m.reset()
 
+    def merge(self, other: "MetricsRegistry", prefix: str = ""
+              ) -> "MetricsRegistry":
+        """Copy every metric from ``other`` into this registry under
+        ``prefix`` — counters by value, gauges with their full
+        min/max/mean running summary, histograms bucket-by-bucket (bucket
+        bounds come from the source; a pre-existing target with different
+        bounds is replaced).  Values are copied, not moved, and repeated
+        merges overwrite — so fanning a replica registry in every sync is
+        idempotent and the source stays authoritative."""
+        for m in other:
+            name = prefix + m.name
+            if m.kind == "counter":
+                self.counter(name, m.help).set(m.value)
+            elif m.kind == "gauge":
+                g = self.gauge(name, m.help)
+                g.value, g.n, g.total = m.value, m.n, m.total
+                g.vmin, g.vmax = m.vmin, m.vmax
+            else:
+                h = self._metrics.get(name)
+                if not isinstance(h, Histogram) or h.uppers != m.uppers:
+                    h = self._metrics[name] = Histogram(name, m.uppers,
+                                                        m.help)
+                h.counts = list(m.counts)
+                h.sum, h.count = m.sum, m.count
+        return self
+
 
 # ---------------------------------------------------------------------------
 # typed engine stats (dict-compatible view over registry counters)

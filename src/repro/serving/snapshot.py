@@ -40,6 +40,12 @@ Recovery contract (what survives, what is recomputed, what is checked):
     restoring engine's mesh), so a ``tp=8`` snapshot restores onto
     ``tp=1`` and vice versa — pass ``mesh=`` in ``engine_kw`` to pick
     the new placement.
+  * **Fleet-level**: a ``ReplicatedEngine`` snapshot is a list of these
+    per-replica snapshots plus router state — owner table, per-replica
+    health, the retry/quarantine ledger, router counters — so restoring
+    reproduces a DEGRADED fleet, not an idealized healthy one.  The
+    failover/migration/quarantine contract built on top lives in
+    ``serving/replicas.py``.
 """
 
 from __future__ import annotations
@@ -60,6 +66,21 @@ from repro.serving.request import (FinishReason, Request, RequestState,
                                    SamplingParams, Sequence, reserve_req_ids)
 
 SNAPSHOT_VERSION = 1
+
+# constructor kwargs a snapshot's ``config`` section pins — callers must
+# not override them on restore, and fleet tooling (``ReplicatedEngine``)
+# strips them from shared engine kwargs before passing through
+GEOMETRY_KEYS = ("max_slots", "page_size", "max_len", "n_pages",
+                 "kv_dtype", "prefix_sharing", "chunk_size")
+
+
+def engine_kwargs_from_config(c: dict) -> dict:
+    """Constructor kwargs for an engine geometrically identical to the one
+    a snapshot's ``config`` section describes.  Shared by ``restore_engine``
+    and by the replica router, which uses it to build EMPTY engines of the
+    fleet's geometry (a fresh replica for ``scale_to``, a placeholder for a
+    DOWN slot on fleet restore)."""
+    return {k: c[k] for k in GEOMETRY_KEYS}
 
 
 def _ser_request(req: Request, resume_key) -> dict:
@@ -157,15 +178,11 @@ def restore_engine(snap: dict, cfg, params, **engine_kw):
     if cfg.name != c["model"]:
         raise ValueError(
             f"snapshot is for model {c['model']!r}, got {cfg.name!r}")
-    for k in ("max_slots", "page_size", "max_len", "n_pages", "kv_dtype",
-              "prefix_sharing", "chunk_size"):
+    for k in GEOMETRY_KEYS:
         if k in engine_kw:
             raise ValueError(f"{k} is fixed by the snapshot")
     eng = ContinuousBatchingEngine(
-        cfg, params, max_slots=c["max_slots"], page_size=c["page_size"],
-        max_len=c["max_len"], n_pages=c["n_pages"], kv_dtype=c["kv_dtype"],
-        prefix_sharing=c["prefix_sharing"], chunk_size=c["chunk_size"],
-        **engine_kw)
+        cfg, params, **engine_kwargs_from_config(c), **engine_kw)
     now = eng._clock()
 
     reqs: dict[int, Request] = {}
@@ -280,4 +297,5 @@ def load_snapshot(directory, cfg, step: Optional[int] = None) -> dict:
 
 
 __all__ = ["snapshot_engine", "restore_engine", "save_snapshot",
-           "load_snapshot", "SNAPSHOT_VERSION"]
+           "load_snapshot", "engine_kwargs_from_config", "GEOMETRY_KEYS",
+           "SNAPSHOT_VERSION"]

@@ -1,0 +1,503 @@
+"""Replica-level fault tolerance (``serving/replicas.py`` +
+``ft/coordinator.py::FleetSupervisor``): health transitions, crash
+failover (request migration and snapshot restore, both token-identical),
+poison quarantine, heartbeat-silence and straggler detection, elastic
+drain/scale, and degraded-fleet snapshot round-trips.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.ft.coordinator import (EngineSupervisor, FleetSupervisor,
+                                  HeartbeatRegistry)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import (FaultInjector, ReplicaHealth, ReplicatedEngine,
+                           SamplingParams, assert_fleet_invariants)
+from repro.serving.request import FinishReason
+
+CFG = ModelConfig(name="repft", d_model=64, n_layers=2, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=256, dtype="float32")
+
+KW = dict(max_slots=4, page_size=4, n_pages=64, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(n, lo=6, hi=12, seed=0, families=0):
+    rng = np.random.RandomState(seed)
+    stems = [list(map(int, rng.randint(1, CFG.vocab - 1, 8)))
+             for _ in range(max(families, 1))]
+    out = []
+    for i in range(n):
+        tail = list(map(int, rng.randint(1, CFG.vocab - 1,
+                                         rng.randint(lo, hi))))
+        out.append((stems[i % families] + tail) if families else tail)
+    return out
+
+
+def _run_fleet(eng, prompts, sampling, max_steps=3000):
+    """Admit all prompts, serve to completion; returns outputs keyed by
+    ADDITION INDEX (req ids differ across runs — the global counter)."""
+    if callable(sampling):
+        reqs = [eng.add_request(p, sampling=sampling(i))
+                for i, p in enumerate(prompts)]
+    else:
+        reqs = [eng.add_request(p, sampling=sampling) for p in prompts]
+    for _ in range(max_steps):
+        if not eng.has_work():
+            break
+        eng.step()
+    assert not eng.has_work(), "fleet did not converge"
+    return {i: (list(r.output_tokens), r.finish_reason)
+            for i, r in enumerate(reqs)}
+
+
+def _arm_crash(rep, in_steps=1):
+    """Schedule a SimulatedCrash on one replica engine ``in_steps`` steps
+    from now (replica-targeted: the injector rides that engine only)."""
+    inj = FaultInjector(seed=0)
+    inj.schedule(rep.step_idx + in_steps, "crash_before_harvest")
+    rep.faults = inj
+    return inj
+
+
+# ---------------------------------------------------------------------------
+# health states + routing
+# ---------------------------------------------------------------------------
+
+
+def test_route_never_selects_non_healthy(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=3,
+                           routing="round_robin", **KW)
+    assert [eng.health(i) for i in range(3)] == [ReplicaHealth.HEALTHY] * 3
+    eng._health[0] = ReplicaHealth.DEGRADED
+    eng._health[2] = ReplicaHealth.DRAINING
+    for k in range(6):
+        idx, _ = eng.route(_prompts(1, seed=k)[0])
+        eng._rr += 1
+        assert idx == 1
+    eng._health[1] = ReplicaHealth.DOWN
+    with pytest.raises(RuntimeError, match="no healthy replicas"):
+        eng.route(_prompts(1, seed=9)[0])
+
+
+def test_step_exception_marks_down_not_poison(params):
+    """A replica whose step() raises goes DOWN; the router keeps stepping
+    the survivors in the SAME call and every request still finishes."""
+    eng = ReplicatedEngine(CFG, params, n_replicas=2,
+                           routing="round_robin", **KW)
+    sp = SamplingParams(max_new_tokens=6, temperature=0.0)
+    outs = None
+    reqs = [eng.add_request(p, sampling=sp)
+            for p in _prompts(6, seed=1)]
+    _arm_crash(eng.replicas[0], in_steps=2)
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    assert eng.health(0) is ReplicaHealth.DOWN
+    assert "SimulatedCrash" in eng.down_cause(0)
+    assert eng.health(1) is ReplicaHealth.HEALTHY
+    outs = {r.req_id: r.finish_reason for r in reqs}
+    assert all(fr in (FinishReason.LENGTH, FinishReason.EOS)
+               for fr in outs.values()), outs
+    assert eng.stats()["router"]["router.failovers"] == 1
+    assert eng.stats()["router"]["router.migrations"] > 0
+    assert_fleet_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# failover: migration (no snapshot) and snapshot restore
+# ---------------------------------------------------------------------------
+
+
+def test_migration_failover_greedy_token_identical(params):
+    prompts = _prompts(8, seed=2, families=2)
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+    base = _run_fleet(ReplicatedEngine(CFG, params, n_replicas=4, **KW),
+                      prompts, sp)
+    eng = ReplicatedEngine(CFG, params, n_replicas=4, **KW)
+    reqs = [eng.add_request(p, sampling=sp) for p in prompts]
+    for _ in range(2):
+        eng.step()
+    victim = next(i for i in range(4) if eng.replicas[i].has_work())
+    _arm_crash(eng.replicas[victim], in_steps=1)
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    got = {i: (list(r.output_tokens), r.finish_reason)
+           for i, r in enumerate(reqs)}
+    assert got == base, "greedy outputs must survive migration unchanged"
+    assert eng.health(victim) is ReplicaHealth.DOWN
+    assert eng.stats()["router"]["router.restored_replicas"] == 0
+    assert_fleet_invariants(eng)
+
+
+def test_migration_failover_sampled_token_identical(params):
+    """Sampled requests must ALSO survive the crash token-identically: the
+    device-side PRNG carry dies with the replica, and migration rebuilds
+    it host-side by replaying len(output_tokens) splits from the seed."""
+    prompts = _prompts(6, seed=3, families=2)
+
+    def sp(i):
+        return SamplingParams(max_new_tokens=8, temperature=0.9, seed=100 + i)
+
+    base = _run_fleet(ReplicatedEngine(CFG, params, n_replicas=2, **KW),
+                      prompts, sp)
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    reqs = [eng.add_request(p, sampling=sp(i)) for i, p in enumerate(prompts)]
+    for _ in range(3):
+        eng.step()
+    victim = next(i for i in range(2) if eng.replicas[i].has_work())
+    _arm_crash(eng.replicas[victim], in_steps=1)
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    got = {i: (list(r.output_tokens), r.finish_reason)
+           for i, r in enumerate(reqs)}
+    assert got == base, "sampled outputs must replay identically"
+    assert eng.stats()["router"]["router.migrations"] > 0
+    assert_fleet_invariants(eng)
+
+
+def test_snapshot_failover_restores_in_place(params):
+    prompts = _prompts(8, seed=4, families=2)
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+    base = _run_fleet(ReplicatedEngine(CFG, params, n_replicas=2, **KW),
+                      prompts, sp)
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    reqs = [eng.add_request(p, sampling=sp) for p in prompts]
+    # the restore rebuilds NEW Request objects for everything the snapshot
+    # holds (req ids preserved) — collect finishes from the router, where
+    # both the survivors' originals and the restored objects surface
+    idx_by_rid = {r.req_id: i for i, r in enumerate(reqs)}
+    done = {}
+    for _ in range(2):
+        for r in eng.step():
+            done[idx_by_rid[r.req_id]] = (list(r.output_tokens),
+                                          r.finish_reason)
+    eng.publish_snapshots()
+    for _ in range(2):
+        for r in eng.step():
+            done[idx_by_rid[r.req_id]] = (list(r.output_tokens),
+                                          r.finish_reason)
+    victim = next(i for i in range(2) if eng.replicas[i].has_work())
+    _arm_crash(eng.replicas[victim], in_steps=1)
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        for r in eng.step():
+            done[idx_by_rid[r.req_id]] = (list(r.output_tokens),
+                                          r.finish_reason)
+    # the crashed slot restored from its snapshot (fresh rank, HEALTHY);
+    # snapshot requests resumed token-identically, post-publish admissions
+    # fell through to migration — either way outputs are unchanged
+    assert eng.health(victim) is ReplicaHealth.HEALTHY
+    r = eng.stats()["router"]
+    assert r["router.failovers"] == 1
+    assert r["router.restored_replicas"] == 1
+    assert done == base
+    assert_fleet_invariants(eng)
+
+
+def test_quarantine_poison_request_after_two_kills(params):
+    """A request that rides two replicas down is poison: it finishes
+    ABORTED instead of migrating a third time, and every OTHER request
+    still completes."""
+    eng = ReplicatedEngine(CFG, params, n_replicas=3,
+                           routing="round_robin", max_request_retries=2,
+                           **KW)
+    sp = SamplingParams(max_new_tokens=16, temperature=0.0)
+    prompts = _prompts(6, seed=5)
+    reqs = [eng.add_request(p, sampling=sp) for p in prompts]
+    poison = reqs[0]
+    first_owner = eng.owner_of(poison.req_id)
+    _arm_crash(eng.replicas[first_owner], in_steps=1)
+    eng.step()
+    assert eng.health(first_owner) is ReplicaHealth.DOWN
+    second_owner = eng.owner_of(poison.req_id)
+    assert second_owner is not None and second_owner != first_owner
+    _arm_crash(eng.replicas[second_owner], in_steps=1)
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    assert poison.finish_reason is FinishReason.ABORTED
+    assert poison.req_id in eng.quarantined
+    r = eng.stats()["router"]
+    assert r["router.quarantined"] == 1
+    assert r["router.failovers"] == 2
+    for other in reqs[1:]:
+        assert other.finish_reason in (FinishReason.LENGTH, FinishReason.EOS)
+    assert_fleet_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# detection: heartbeat silence + stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_silence_goes_down_by_step_lag(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=2,
+                           routing="round_robin", silence_steps_down=3,
+                           **KW)
+    sp = SamplingParams(max_new_tokens=24, temperature=0.0)
+    reqs = [eng.add_request(p, sampling=sp) for p in _prompts(4, seed=6)]
+    inj = FaultInjector(seed=0)
+    inj.schedule(eng.replicas[0].step_idx + 1, "heartbeat_silence")
+    eng.replicas[0].faults = inj
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    assert ("heartbeat_silence" in
+            [k for _, k, _ in inj.fired]), inj.fired
+    assert eng.health(0) is ReplicaHealth.DOWN
+    assert eng.down_cause(0) == "heartbeat_silence"
+    for r in reqs:
+        assert r.finish_reason in (FinishReason.LENGTH, FinishReason.EOS)
+    assert_fleet_invariants(eng)
+
+
+def test_straggler_degraded_then_recovers(params):
+    # three ranks: the fleet MEDIAN step time must come from healthy peers
+    # (with two ranks the median IS the slower one — nothing can exceed it)
+    sup = FleetSupervisor(straggler_window=4, straggler_threshold=3.0)
+    eng = ReplicatedEngine(CFG, params, n_replicas=3,
+                           routing="round_robin", supervisor=sup, **KW)
+    sp = SamplingParams(max_new_tokens=48, temperature=0.0)
+    for p in _prompts(6, seed=7):
+        eng.add_request(p, sampling=sp)
+    inj = FaultInjector(seed=0)
+    inj.schedule(eng.replicas[0].step_idx + 1, "straggle", factor=100.0,
+                 hold_steps=4)
+    eng.replicas[0].faults = inj
+    saw_degraded = False
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+        if eng.health(0) is ReplicaHealth.DEGRADED:
+            saw_degraded = True
+            # a DEGRADED replica keeps its residents but gets no new work
+            idx, _ = eng.route(_prompts(1, seed=8)[0])
+            assert idx != 0
+    assert saw_degraded, "straggle fault never flagged the replica"
+    assert eng.health(0) is ReplicaHealth.HEALTHY, \
+        "replica must recover once its rolling window clears"
+    assert eng.replicas[0].straggle_factor == 1.0   # hold released
+    assert_fleet_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# elasticity: drain + scale
+# ---------------------------------------------------------------------------
+
+
+def test_drain_replica_migrates_and_detaches(params):
+    prompts = _prompts(8, seed=9, families=2)
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+    base = _run_fleet(ReplicatedEngine(CFG, params, n_replicas=2, **KW),
+                      prompts, sp)
+    eng = ReplicatedEngine(CFG, params, n_replicas=2, **KW)
+    reqs = [eng.add_request(p, sampling=sp) for p in prompts]
+    for _ in range(2):
+        eng.step()
+    eng.drain_replica(0, migrate=True)
+    assert eng.health(0) is ReplicaHealth.DOWN
+    assert eng.down_cause(0) == "drained"
+    assert not eng.replicas[0].has_work()
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    got = {i: (list(r.output_tokens), r.finish_reason)
+           for i, r in enumerate(reqs)}
+    assert got == base, "a planned drain must not change any output"
+    assert eng.stats()["router"]["router.drains"] == 1
+    assert_fleet_invariants(eng)
+
+
+def test_drain_replica_finishes_residents_without_migration(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=2,
+                           routing="round_robin", **KW)
+    sp = SamplingParams(max_new_tokens=6, temperature=0.0)
+    reqs = [eng.add_request(p, sampling=sp) for p in _prompts(4, seed=10)]
+    eng.drain_replica(0, migrate=False)
+    assert eng.health(0) is ReplicaHealth.DRAINING
+    # new work only lands on replica 1 while 0 drains its own residents
+    extra = eng.add_request(_prompts(1, seed=11)[0], sampling=sp)
+    assert eng.owner_of(extra.req_id) == 1
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    assert eng.health(0) is ReplicaHealth.DOWN   # drained dry -> detached
+    for r in reqs + [extra]:
+        assert r.finish_reason in (FinishReason.LENGTH, FinishReason.EOS)
+    assert_fleet_invariants(eng)
+
+
+def test_scale_to_grow_and_shrink(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=2,
+                           routing="round_robin", **KW)
+    sp = SamplingParams(max_new_tokens=4, temperature=0.0)
+    plan = eng.scale_to(4)
+    assert (plan.old_data_parallel, plan.new_data_parallel) == (2, 4)
+    assert plan.action == "grow"
+    assert eng.n_replicas == 4
+    assert all(eng.health(i) is ReplicaHealth.HEALTHY for i in range(4))
+    reqs = [eng.add_request(p, sampling=sp) for p in _prompts(8, seed=12)]
+    assert len({eng.owner_of(r.req_id) for r in reqs}) == 4
+    for _ in range(2):
+        eng.step()
+    plan = eng.scale_to(1)
+    assert plan.action == "shrink"
+    assert len(plan.evicted_ranks) == 3
+    assert [h for h in eng.stats()["health"]].count("healthy") == 1
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    for r in reqs:
+        assert r.finish_reason in (FinishReason.LENGTH, FinishReason.EOS)
+    assert eng.scale_to(1).action == "none"
+    assert_fleet_invariants(eng)
+
+
+def test_scale_to_revives_down_slot_in_place(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=2,
+                           routing="round_robin", **KW)
+    sp = SamplingParams(max_new_tokens=6, temperature=0.0)
+    reqs = [eng.add_request(p, sampling=sp) for p in _prompts(4, seed=13)]
+    _arm_crash(eng.replicas[0], in_steps=1)
+    eng.step()
+    assert eng.health(0) is ReplicaHealth.DOWN
+    plan = eng.scale_to(2)
+    assert plan.action == "grow"
+    assert eng.n_replicas == 2, "a DOWN slot revives in place, not appended"
+    assert eng.health(0) is ReplicaHealth.HEALTHY
+    assert eng.replicas[0].max_slots == KW["max_slots"]
+    for _ in range(3000):
+        if not eng.has_work():
+            break
+        eng.step()
+    for r in reqs:
+        assert r.finish_reason in (FinishReason.LENGTH, FinishReason.EOS)
+    assert_fleet_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# degraded-fleet snapshot round trip
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_v2_roundtrips_degraded_fleet(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=3,
+                           routing="round_robin", **KW)
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+    reqs = [eng.add_request(p, sampling=sp) for p in _prompts(6, seed=14)]
+    _arm_crash(eng.replicas[1], in_steps=1)
+    eng.step()
+    assert eng.health(1) is ReplicaHealth.DOWN
+    snap = eng.snapshot()
+    assert snap["format"] == "replicated-engine-snapshot-v2"
+    assert snap["health"] == ["healthy", "down", "healthy"]
+    assert snap["replicas"][1] is None, "a crashed engine is never snapshot"
+    back = ReplicatedEngine.restore(snap, CFG, params)
+    assert back.health(1) is ReplicaHealth.DOWN
+    assert "SimulatedCrash" in back.down_cause(1)
+    assert back._retries == eng._retries
+    assert back.quarantined == eng.quarantined
+    assert (back.stats()["router"]["router.failovers"]
+            == eng.stats()["router"]["router.failovers"])
+    # the DOWN placeholder is never routed; outputs complete on survivors
+    done = {r.req_id: r for r in back.serve_all()}
+    for r in reqs:
+        fin = done[r.req_id]
+        assert fin.finish_reason in (FinishReason.LENGTH, FinishReason.EOS)
+        assert fin.output_tokens == r.output_tokens or fin is not r
+    assert_fleet_invariants(back)
+
+
+# ---------------------------------------------------------------------------
+# satellites: metrics fan-in (gauges/histograms), router.cancels,
+# supervisor rank claims
+# ---------------------------------------------------------------------------
+
+
+def test_sync_metrics_copies_gauges_and_histograms(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=2,
+                           routing="round_robin", **KW)
+    sp = SamplingParams(max_new_tokens=3, temperature=0.0)
+    for p in _prompts(4, seed=15):
+        eng.add_request(p, sampling=sp)
+    eng.serve_all()
+    reg = eng.sync_metrics()
+    by_name = {m.name: m for m in reg}
+    for i in range(2):
+        g = by_name[f"replica{i}.pool.free_pages"]
+        assert g.kind == "gauge" and g.n > 0
+        h = by_name[f"replica{i}.request.e2e_ms"]
+        assert h.kind == "histogram" and h.count > 0
+        src = {m.name: m for m in eng.replicas[i].registry}
+        assert h.counts == src["request.e2e_ms"].counts
+    # idempotent: a second sync overwrites, never double-counts
+    c0 = by_name["replica0.request.e2e_ms"].count
+    assert {m.name: m for m in eng.sync_metrics()}[
+        "replica0.request.e2e_ms"].count == c0
+
+
+def test_router_cancels_counter_both_paths(params):
+    eng = ReplicatedEngine(CFG, params, n_replicas=2,
+                           routing="round_robin", **KW)
+    sp = SamplingParams(max_new_tokens=12, temperature=0.0)
+    routed = eng.add_request(_prompts(1, seed=16)[0], sampling=sp)
+    direct = eng.replicas[1].add_request(_prompts(1, seed=17)[0],
+                                         sampling=sp)
+    assert eng.cancel(routed.req_id)          # owner path
+    assert eng.cancel(direct.req_id)          # fallback: scan live replicas
+    assert eng.stats()["router"]["router.cancels"] == 2
+    assert not eng.cancel(routed.req_id)      # second cancel is a no-op
+    assert eng.stats()["router"]["router.cancels"] == 2
+    eng.serve_all()
+    assert routed.finish_reason is FinishReason.ABORTED
+    assert direct.finish_reason is FinishReason.ABORTED
+
+
+def test_supervisor_rank_claims():
+    reg = HeartbeatRegistry(timeout_s=60.0)
+    a = EngineSupervisor(heartbeat=reg)
+    b = EngineSupervisor(heartbeat=reg)
+    assert (a.rank, b.rank) == (0, 1), "shared registry auto-claims distinct"
+    with pytest.raises(ValueError, match="already claimed"):
+        EngineSupervisor(heartbeat=reg, rank=0)
+    c = EngineSupervisor(heartbeat=reg, rank=7)
+    assert c.rank == 7
+    reg.release(1)
+    assert EngineSupervisor(heartbeat=reg).rank == 1  # freed ranks reusable
+
+
+def test_fleet_supervisor_rank_claims(params):
+    sup = FleetSupervisor()
+
+    class _Eng:   # attach only touches heartbeat fields
+        step_idx = 0
+        heartbeat = None
+        heartbeat_rank = 0
+
+    r0 = sup.attach(_Eng())
+    r1 = sup.attach(_Eng())
+    assert (r0, r1) == (0, 1)
+    with pytest.raises(ValueError, match="already claimed"):
+        sup.attach(_Eng(), rank=r0)
+    sup.detach(r0)
+    assert sup.attach(_Eng()) == 0

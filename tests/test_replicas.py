@@ -169,6 +169,89 @@ def test_router_interleavings_no_starvation(params, data):
         assert done.get(rid) in (None, FinishReason.ABORTED)
 
 
+@settings(deadline=None, max_examples=8)
+@given(st.data())
+def test_owner_table_integrity_under_chaos(params, data):
+    """Property (fleet FT): across arbitrary interleavings of
+    add/step/cancel/replica-failure/publish/snapshot-restore, the router's
+    ``_owner`` table never references a finished, migrated-away or
+    quarantined request, never points at a DOWN replica, and every
+    survivor keeps exact pool invariants (``assert_fleet_invariants``)."""
+    from repro.serving.faults import assert_fleet_invariants
+
+    eng = ReplicatedEngine(CFG, params, n_replicas=3, **KW)
+    sp = SamplingParams(max_new_tokens=3, temperature=0.0)
+    prompts = _prompts(8, seed=13, families=2)
+    done = set()
+    for p in prompts:
+        eng.add_request(p, sampling=sp)
+        op = data.draw(st.sampled_from(
+            ["step", "cancel", "fail", "publish", "restore", "none"]),
+            label="op")
+        if op == "step":
+            for _ in range(data.draw(st.integers(1, 3), label="steps")):
+                done.update(r.req_id for r in eng.step())
+        elif op == "cancel":
+            owned = sorted(eng._owner)
+            if owned:
+                rid = owned[data.draw(st.integers(0, len(owned) - 1),
+                                      label="victim")]
+                eng.cancel(rid)
+        elif op == "publish":
+            eng.publish_snapshots()
+        elif op == "fail":
+            healthy = eng._healthy()
+            if len(healthy) > 1:
+                i = healthy[data.draw(st.integers(0, len(healthy) - 1),
+                                      label="down")]
+                eng._fail_replica(i, cause="injected")
+        elif op == "restore":
+            eng = ReplicatedEngine.restore(eng.snapshot(), CFG, params)
+        assert_fleet_invariants(eng)
+    done.update(r.req_id for r in eng.serve_all())
+    assert_fleet_invariants(eng)
+    assert not eng._owner, "owner table must empty once all work is done"
+    assert not eng.has_work()
+
+
+def test_owner_table_integrity_seeded(params):
+    """Non-hypothesis twin of the owner-table chaos property above (same
+    oracle, numpy-seeded interleavings) so the coverage survives
+    environments without hypothesis installed."""
+    from repro.serving.faults import assert_fleet_invariants
+
+    rng = np.random.RandomState(17)
+    for trial in range(3):
+        eng = ReplicatedEngine(CFG, params, n_replicas=3, **KW)
+        sp = SamplingParams(max_new_tokens=3, temperature=0.0)
+        done = set()
+        for p in _prompts(8, seed=70 + trial, families=2):
+            eng.add_request(p, sampling=sp)
+            op = ["step", "cancel", "fail", "publish", "restore",
+                  "none"][rng.randint(6)]
+            if op == "step":
+                for _ in range(rng.randint(1, 4)):
+                    done.update(r.req_id for r in eng.step())
+            elif op == "cancel":
+                owned = sorted(eng._owner)
+                if owned:
+                    eng.cancel(owned[rng.randint(len(owned))])
+            elif op == "publish":
+                eng.publish_snapshots()
+            elif op == "fail":
+                healthy = eng._healthy()
+                if len(healthy) > 1:
+                    eng._fail_replica(healthy[rng.randint(len(healthy))],
+                                      cause="injected")
+            elif op == "restore":
+                eng = ReplicatedEngine.restore(eng.snapshot(), CFG, params)
+            assert_fleet_invariants(eng)
+        done.update(r.req_id for r in eng.serve_all())
+        assert_fleet_invariants(eng)
+        assert not eng._owner
+        assert not eng.has_work()
+
+
 def test_router_interleavings_seeded(params):
     """Non-hypothesis twin of the property above so the interleaving
     coverage survives environments without hypothesis installed."""
@@ -244,7 +327,9 @@ def test_replicas_snapshot_restore_midflight(params):
         for r in eng.step():
             done[r.req_id] = (list(r.output_tokens), r.finish_reason)
     snap = eng.snapshot()
-    assert snap["format"] == "replicated-engine-snapshot-v1"
+    assert snap["format"] == "replicated-engine-snapshot-v2"
+    assert snap["health"] == ["healthy", "healthy"]
+    assert "router.routed" in snap["router_counters"]
     back = ReplicatedEngine.restore(snap, CFG, params)
     assert back.n_replicas == 2
     assert {k: v for k, v in back._owner.items()} == eng._owner
